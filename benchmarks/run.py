@@ -1,0 +1,338 @@
+"""Benchmark harness — one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  table1   — client-side resource formulas (Table I), analytic, at the
+             paper's ResNet-18 and GPT2-Medium splits.
+  table2   — measured client-update costs for the vision task (Table II
+             in miniature): wall time, FLOPs (scan-aware HLO count) and
+             peak temp memory per method.
+  table3   — measured client-update costs for LM+LoRA (Table III).
+  fig2     — convergence: accuracy after fixed federated rounds,
+             HERON vs CSE-FSL vs SFLV2 (IID and non-IID).
+  fig4     — ZO hyperparameter ablation: mu sweep + n_pairs sweep.
+  fig6     — aux-model complexity ablation: HERON flat, FO needs capacity.
+  kernels  — wall-clock of the XLA hot paths + Pallas interpret sanity.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+ROWS = []
+
+
+def row(name, us, derived):
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def timeit(fn, *args, n=5, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / n * 1e6, out
+
+
+# ---------------------------------------------------------------------------
+def bench_table1():
+    from repro.core.split import client_costs
+    # paper splits: ResNet-18 (client = stem + 1 block, aux = FC) and
+    # GPT2-Medium (client = 6 blocks, aux = 3 blocks + unembed)
+    settings = {
+        "resnet18": dict(p_batch_bytes=256 * 32 * 32 * 3 * 4,
+                         q_smashed_bytes=256 * 16 * 16 * 64 * 4,
+                         client_params=160_000, aux_params=5_130,
+                         f_c=2 * 0.9e9, f_a=2 * 1.3e4),
+        "gpt2-medium": dict(p_batch_bytes=8 * 512 * 4,
+                            q_smashed_bytes=8 * 512 * 1024 * 4,
+                            client_params=85e6, aux_params=55e6,
+                            f_c=2 * 0.9e12, f_a=2 * 0.6e12),
+    }
+    for scale, kw in settings.items():
+        base = client_costs("cse_fsl", **kw)
+        for m in ("sflv2", "cse_fsl", "fsl_sage", "heron"):
+            c = client_costs(m, **kw)
+            mem_save = 1 - c["peak_mem_bytes"] / base["peak_mem_bytes"]
+            flop_save = 1 - c["flops"] / base["flops"]
+            row(f"table1/{scale}/{m}", 0.0,
+                f"comm={c['comm_bytes']:.3g}B "
+                f"mem_save_vs_cse={mem_save:.2f} "
+                f"flop_save_vs_cse={flop_save:.2f}")
+
+
+# ---------------------------------------------------------------------------
+def _client_update_costs(method):
+    """Measured per-client-update costs on the vision task."""
+    from repro.core import protocols as P
+    from repro.core import zo as Z
+    from repro.launch.hlo_costs import total_costs
+    from repro.models import cnn as CNN
+    from repro.optim.optimizers import make_optimizer
+
+    cfg = CNN.CNNConfig(widths=(16, 32), blocks_per_stage=1, classes=10,
+                        client_blocks=1)
+    params = CNN.init_cnn(jax.random.PRNGKey(0), cfg)
+    api = P.cnn_api(cfg)
+    opt = make_optimizer("zo_sgd" if method == "heron" else "adamw", 1e-3)
+    x = jax.random.normal(jax.random.PRNGKey(1), (32, 16, 16, 3))
+    y = jax.random.randint(jax.random.PRNGKey(2), (32,), 0, 10)
+    batch = {"inputs": x, "labels": y}
+    oc = opt.init(params["client"])
+
+    if method == "heron":
+        def update(cp, oc):
+            g, info = Z.zo_gradient(
+                lambda p: api.client_loss(p, batch), cp,
+                jax.random.PRNGKey(3), Z.ZOConfig(mu=1e-3, n_pairs=1))
+            cp, oc = opt.update(g, oc, cp)
+            return cp, oc
+    else:
+        def update(cp, oc):
+            (_, _), g = jax.value_and_grad(
+                lambda p: api.client_loss(p, batch), has_aux=True)(cp)
+            cp, oc = opt.update(g, oc, cp)
+            return cp, oc
+
+    jitted = jax.jit(update)
+    us, _ = timeit(jitted, params["client"], oc, n=3)
+    comp = jitted.lower(params["client"], oc).compile()
+    costs = total_costs(comp.as_text())
+    mem = comp.memory_analysis()
+    return us, costs["flops"], int(mem.temp_size_in_bytes)
+
+
+def bench_table2():
+    base = None
+    stats = {}
+    for m in ("sflv2", "cse_fsl", "heron"):
+        us, fl, mem = _client_update_costs(m)
+        stats[m] = (fl, mem)
+        row(f"table2/resnet_client_update/{m}", us,
+            f"flops={fl:.3g} temp_mem={mem}")
+    row("table2/heron_vs_cse_flops_ratio", 0.0,
+        f"{stats['heron'][0] / stats['cse_fsl'][0]:.3f} (paper: ~0.67)")
+    row("table2/heron_vs_cse_mem_ratio", 0.0,
+        f"{stats['heron'][1] / stats['cse_fsl'][1]:.3f} (paper: ~0.36)")
+
+
+# ---------------------------------------------------------------------------
+def bench_table3():
+    from repro.configs.gpt2 import gpt2_tiny
+    from repro.core import protocols as P
+    from repro.core import zo as Z
+    from repro.core.split import combine, partition
+    from repro.data.synthetic import BigramLM
+    from repro.distributed.sharding import AxisRules
+    from repro.launch.hlo_costs import total_costs
+    from repro.models import lora as LoRA
+    from repro.models import transformer as T
+
+    cfg = gpt2_tiny()
+    rules = AxisRules(mesh=None)
+    params = LoRA.add_lora(jax.random.PRNGKey(2),
+                           T.init_lm(jax.random.PRNGKey(0), cfg), rank=8)
+    api = P.lm_api(cfg, rules)
+    ds = BigramLM(vocab=cfg.vocab, seq_len=33, seed=0)
+    batch = ds.batch(jax.random.PRNGKey(5), 8)
+    tc, fc = partition(params["client"], LoRA.lora_pred)
+
+    def heron_update(tc):
+        g, _ = Z.zo_gradient(
+            lambda t: api.client_loss(combine(t, fc), batch), tc,
+            jax.random.PRNGKey(3), Z.ZOConfig(mu=1e-3, n_pairs=1))
+        return g
+
+    def fo_update(tc):
+        (_, _), g = jax.value_and_grad(
+            lambda t: api.client_loss(combine(t, fc), batch),
+            has_aux=True)(tc)
+        return g
+
+    stats = {}
+    for name, fn in (("heron", heron_update),
+                     ("splitlora_fo", fo_update)):
+        jitted = jax.jit(fn)
+        us, _ = timeit(jitted, tc, n=3)
+        comp = jitted.lower(tc).compile()
+        costs = total_costs(comp.as_text())
+        mem = comp.memory_analysis()
+        stats[name] = (costs["flops"], int(mem.temp_size_in_bytes))
+        row(f"table3/gpt2_lora_client_update/{name}", us,
+            f"flops={costs['flops']:.3g} "
+            f"temp_mem={mem.temp_size_in_bytes}")
+    row("table3/heron_vs_fo_flops_ratio", 0.0,
+        f"{stats['heron'][0] / stats['splitlora_fo'][0]:.3f} "
+        "(paper: ~0.56-0.67)")
+    row("table3/heron_vs_fo_mem_ratio", 0.0,
+        f"{stats['heron'][1] / stats['splitlora_fo'][1]:.3f}")
+
+
+# ---------------------------------------------------------------------------
+def _fed_accuracy(method, alpha=0.0, rounds=10):
+    from repro.core import protocols as P
+    from repro.core import zo as Z
+    from repro.data.partition import dirichlet_client_probs
+    from repro.data.pipeline import round_batches
+    from repro.data.synthetic import GaussianMixtureImages
+    from repro.models import cnn as CNN
+    from repro.optim.optimizers import make_optimizer
+
+    cfg = CNN.CNNConfig(widths=(8, 16), blocks_per_stage=1, classes=4,
+                        client_blocks=1)
+    ds = GaussianMixtureImages(classes=4, hw=8, noise=0.5)
+    probs = dirichlet_client_probs(3, 4, alpha) if alpha > 0 else None
+    api = P.cnn_api(cfg)
+    fed = P.FedConfig(n_clients=3, h=2)
+    copt = make_optimizer("zo_sgd" if method == "heron" else "adamw",
+                          2e-2 if method == "heron" else 2e-3)
+    sopt = make_optimizer("adamw", 2e-3)
+    rnd = jax.jit(P.make_fed_round(api, method,
+                                   Z.ZOConfig(mu=1e-3, n_pairs=2), fed,
+                                   copt, sopt))
+    params = CNN.init_cnn(jax.random.PRNGKey(0), cfg)
+    state = {"client": params["client"], "server": params["server"],
+             "opt_server": sopt.init(params["server"])}
+    t0 = time.perf_counter()
+    for r in range(rounds):
+        rb = round_batches(ds, jax.random.PRNGKey(r), 3, 2, 16,
+                           client_probs=probs)
+        state, _ = rnd(state, rb, jax.random.PRNGKey(1000 + r))
+    dt = (time.perf_counter() - t0) / rounds * 1e6
+    eb = ds.batch(jax.random.PRNGKey(9999), 256)
+    s = CNN.client_forward(state["client"], eb["inputs"], cfg)
+    logits = CNN.server_logits(state["server"], s, cfg)
+    return dt, float(CNN.accuracy(logits, eb["labels"]))
+
+
+def bench_fig2():
+    for alpha, tag in ((0.0, "iid"), (0.3, "noniid_a0.3")):
+        for m in ("heron", "cse_fsl", "sflv2"):
+            us, acc = _fed_accuracy(m, alpha)
+            row(f"fig2/{tag}/{m}", us, f"acc_after_10_rounds={acc:.3f}")
+
+
+def bench_fig4():
+    from repro.core import protocols as P
+    from repro.core import zo as Z
+    from repro.data.synthetic import BigramLM
+    from repro.distributed.sharding import AxisRules
+    from repro.models import transformer as T
+    from repro.models.config import ModelConfig
+    from repro.optim.optimizers import make_optimizer
+    cfg = ModelConfig(name="t", n_layers=2, d_model=32, n_heads=4,
+                      n_kv_heads=2, d_ff=64, vocab=31, cut_layers=1,
+                      param_dtype="float32", compute_dtype="float32")
+    rules = AxisRules(mesh=None)
+    api = P.lm_api(cfg, rules)
+    ds = BigramLM(vocab=31, seq_len=17, seed=0)
+
+    def run(mu, pairs):
+        params = T.init_lm(jax.random.PRNGKey(0), cfg)
+        copt = make_optimizer("zo_sgd", 5e-3)
+        sopt = make_optimizer("adamw", 2e-3)
+        st = P.init_train_state(jax.random.PRNGKey(1), params, copt,
+                                sopt)
+        step = jax.jit(P.make_train_step(
+            api, "heron", Z.ZOConfig(mu=mu, n_pairs=pairs), copt, sopt))
+        t0 = time.perf_counter()
+        m = {}
+        for i in range(25):
+            st, m = step(st, ds.batch(jax.random.PRNGKey(100 + i), 16))
+        return (time.perf_counter() - t0) / 25 * 1e6, float(m["loss"])
+
+    for mu in (1e-2, 1e-3, 1e-4):
+        us, loss = run(mu, 2)
+        row(f"fig4/mu_{mu:g}", us, f"loss_after_25_steps={loss:.4f}")
+    for pairs in (1, 2, 4):
+        us, loss = run(1e-3, pairs)
+        row(f"fig4/n_pairs_{pairs}", us,
+            f"loss_after_25_steps={loss:.4f}")
+
+
+def bench_fig6():
+    from repro.core import protocols as P
+    from repro.core import zo as Z
+    from repro.data.synthetic import BigramLM
+    from repro.distributed.sharding import AxisRules
+    from repro.models import transformer as T
+    from repro.models.config import ModelConfig
+    from repro.optim.optimizers import make_optimizer
+    rules = AxisRules(mesh=None)
+    ds = BigramLM(vocab=31, seq_len=17, seed=0)
+
+    def run(method, aux_layers):
+        cfg = ModelConfig(name="t", n_layers=4, d_model=32, n_heads=4,
+                          n_kv_heads=2, d_ff=64, vocab=31, cut_layers=1,
+                          aux_layers=aux_layers, param_dtype="float32",
+                          compute_dtype="float32")
+        api = P.lm_api(cfg, rules)
+        params = T.init_lm(jax.random.PRNGKey(0), cfg)
+        copt = make_optimizer(
+            "zo_sgd" if method == "heron" else "adamw",
+            5e-3 if method == "heron" else 1e-3)
+        sopt = make_optimizer("adamw", 2e-3)
+        st = P.init_train_state(jax.random.PRNGKey(1), params, copt,
+                                sopt)
+        step = jax.jit(P.make_train_step(
+            api, method, Z.ZOConfig(mu=1e-3, n_pairs=2), copt, sopt))
+        m = {}
+        for i in range(25):
+            st, m = step(st, ds.batch(jax.random.PRNGKey(100 + i), 16))
+        return float(m["loss"])
+
+    for method in ("heron", "cse_fsl"):
+        for aux in (0, 1, 2):
+            loss = run(method, aux)
+            row(f"fig6/{method}/aux_layers_{aux}", 0.0,
+                f"loss_after_25_steps={loss:.4f}")
+
+
+# ---------------------------------------------------------------------------
+def bench_kernels():
+    from repro.kernels import ops
+    from repro.models import attention as A
+    q = jax.random.normal(jax.random.PRNGKey(0), (2, 512, 8, 64))
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, 512, 2, 64))
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, 512, 2, 64))
+    naive = jax.jit(lambda q, k, v: A.naive_attention(q, k, v))
+    blocked = jax.jit(lambda q, k, v: A.blocked_attention(
+        q, k, v, q_chunk=128, kv_chunk=128))
+    us_n, _ = timeit(naive, q, k, v, n=3)
+    us_b, _ = timeit(blocked, q, k, v, n=3)
+    row("kernels/naive_attention_512", us_n, "xla")
+    row("kernels/blocked_attention_512", us_b,
+        f"naive_over_blocked={us_n / us_b:.2f}")
+    x = jax.random.normal(jax.random.PRNGKey(3), (128, 256))
+    w = jax.random.normal(jax.random.PRNGKey(4), (256, 128))
+    t0 = time.perf_counter()
+    jax.block_until_ready(ops.zo_matmul(x, w, 7, 1e-3, bm=128))
+    row("kernels/zo_matmul_interpret", (time.perf_counter() - t0) * 1e6,
+        "pallas_interpret_smoke")
+    a = jax.random.uniform(jax.random.PRNGKey(5), (2, 256, 64),
+                           minval=0.5, maxval=0.99)
+    b = jax.random.normal(jax.random.PRNGKey(6), (2, 256, 64))
+    t0 = time.perf_counter()
+    jax.block_until_ready(ops.rg_lru_scan(a, b, bt=64, bw=64))
+    row("kernels/rg_lru_interpret", (time.perf_counter() - t0) * 1e6,
+        "pallas_interpret_smoke")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for fn in (bench_table1, bench_table2, bench_table3, bench_fig2,
+               bench_fig4, bench_fig6, bench_kernels):
+        t0 = time.time()
+        try:
+            fn()
+        except Exception as e:  # pragma: no cover
+            row(f"{fn.__name__}/ERROR", 0.0, repr(e)[:120])
+        print(f"# {fn.__name__} done in {time.time()-t0:.1f}s",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Serve a small model with batched requests through the decode path
+(KV / recurrent caches), demonstrating the serving side of the
+framework for both attention and recurrent architectures.
+
+PYTHONPATH=src python examples/serve_batched.py --arch xlstm-1.3b
+PYTHONPATH=src python examples/serve_batched.py --arch recurrentgemma-9b
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.core import protocols as P
+from repro.distributed.sharding import AxisRules
+from repro.models import transformer as T
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b", choices=list(ARCH_IDS))
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--gen", type=int, default=20)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    rules = AxisRules(mesh=None)
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    serve = jax.jit(P.make_serve_step(cfg, rules))
+    total = args.prompt_len + args.gen
+    caches = P.init_serve_caches(cfg, args.batch, total)
+    if cfg.enc_dec:
+        caches["enc_out"] = jax.random.normal(
+            jax.random.PRNGKey(3), caches["enc_out"].shape
+        ).astype(caches["enc_out"].dtype)
+
+    # batched requests: independent prompts decoded in lock-step
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (args.batch, args.prompt_len), 0,
+                                 cfg.vocab)
+    tok = prompts[:, :1]
+    outs = []
+    t0 = time.time()
+    for t in range(total - 1):
+        logits, caches = serve(params, caches, tok)
+        if t + 1 < args.prompt_len:
+            tok = prompts[:, t + 1:t + 2]       # teacher-forced prefill
+        else:
+            tok = jnp.argmax(logits[:, -1:, :cfg.vocab], axis=-1)
+            outs.append(tok)
+    dt = time.time() - t0
+    gen = jnp.concatenate(outs, axis=1)
+    print(f"arch={args.arch} generated {gen.shape[0]}x{gen.shape[1]} "
+          f"tokens in {dt:.2f}s ({gen.size / dt:.1f} tok/s)")
+    print("request 0:", list(map(int, gen[0][:16])))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Fault-tolerant checkpointing: npz payload + json manifest, atomic
+rename, keep-k GC, step resume.  bf16 leaves are stored as f32 (lossless)
+and cast back on restore.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save(ckpt_dir: str, step: int, tree, keep: int = 3) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    payload = {}
+    dtypes = []
+    for i, l in enumerate(leaves):
+        arr = np.asarray(l)
+        dtypes.append(str(arr.dtype))
+        if arr.dtype == jnp.bfloat16:
+            arr = arr.astype(np.float32)
+        payload[f"p{i}"] = arr
+    tmp = tempfile.mkdtemp(dir=ckpt_dir)
+    np.savez(os.path.join(tmp, "payload.npz"), **payload)
+    manifest = {"step": int(step), "n_leaves": len(leaves),
+                "dtypes": dtypes, "treedef": str(treedef)}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    final = os.path.join(ckpt_dir, f"step_{int(step):08d}")
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)                      # atomic publish
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(all_steps(ckpt_dir))
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                      ignore_errors=True)
+
+
+def all_steps(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("step_") and os.path.exists(
+                os.path.join(ckpt_dir, d, "manifest.json")):
+            out.append(int(d[5:]))
+    return out
+
+
+def latest_step(ckpt_dir: str):
+    steps = all_steps(ckpt_dir)
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, template, step: int | None = None):
+    """Restore into the structure of ``template`` (shape/dtype checked).
+    Returns (tree, step)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{int(step):08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "payload.npz"))
+    leaves, treedef = _flatten(template)
+    assert manifest["n_leaves"] == len(leaves), "structure mismatch"
+    out = []
+    for i, (tmpl, dt) in enumerate(zip(leaves, manifest["dtypes"])):
+        arr = data[f"p{i}"]
+        arr = jnp.asarray(arr, dtype=dt)
+        assert arr.shape == tuple(tmpl.shape), (
+            f"leaf {i}: {arr.shape} vs {tmpl.shape}")
+        out.append(arr)
+    return jax.tree.unflatten(treedef, out), step

@@ -1,0 +1,84 @@
+"""Assigned input shapes + input_specs builders (ShapeDtypeStruct
+stand-ins; no device allocation — the dry-run lowers against these).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def supports_shape(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, ("pure full-attention arch: 524k KV decode is "
+                       "skipped per assignment (sub-quadratic only)")
+    return True, ""
+
+
+def _tok(shape, dtype=jnp.int32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """Pytree of ShapeDtypeStructs for the train/prefill batch."""
+    B, S = shape.global_batch, shape.seq_len
+    cdt = cfg.jnp_compute_dtype()
+    if cfg.enc_dec:
+        # modality frontend stub: precomputed frame embeddings
+        return {"inputs": jax.ShapeDtypeStruct((B, S, cfg.d_model), cdt),
+                "aux_labels": _tok((B, S)),
+                "dec_tokens": _tok((B, S)),
+                "labels": _tok((B, S))}
+    if cfg.frontend == "vision":
+        return {"inputs": jax.ShapeDtypeStruct((B, S, cfg.d_model), cdt),
+                "positions": _tok((3, B, S)),
+                "labels": _tok((B, S))}
+    if cfg.frontend == "audio":
+        return {"inputs": jax.ShapeDtypeStruct((B, S, cfg.d_model), cdt),
+                "labels": _tok((B, S))}
+    return {"inputs": _tok((B, S)), "labels": _tok((B, S))}
+
+
+def decode_token_specs(cfg: ModelConfig, shape: ShapeSpec):
+    B = shape.global_batch
+    if cfg.enc_dec:
+        return _tok((B, 1))
+    if cfg.frontend == "vision":
+        # decoding emits text tokens; M-RoPE degenerates to temporal ids
+        return _tok((B, 1))
+    return _tok((B, 1))
+
+
+def serve_cache_specs(cfg: ModelConfig, shape: ShapeSpec):
+    from repro.core.protocols import init_serve_caches
+    return jax.eval_shape(
+        lambda: init_serve_caches(cfg, shape.global_batch, shape.seq_len))
+
+
+def param_specs(cfg: ModelConfig):
+    from repro.models.transformer import init_lm
+    return init_lm(None, cfg, mode="shape")
+
+
+def param_logical_axes(cfg: ModelConfig):
+    from repro.models.transformer import init_lm
+    return init_lm(None, cfg, mode="axes")

@@ -1,0 +1,13 @@
+"""Paper's vision arch: ResNet-18 on CIFAR-10 (5 clients), split after
+the second norm layer; aux head = single FC."""
+from repro.models.cnn import CNNConfig
+
+
+def full_config() -> CNNConfig:
+    return CNNConfig(widths=(64, 128, 256, 512), blocks_per_stage=2,
+                     classes=10, client_blocks=1)
+
+
+def smoke_config() -> CNNConfig:
+    return CNNConfig(widths=(8, 16), blocks_per_stage=1, classes=10,
+                     client_blocks=1)

@@ -1,0 +1,90 @@
+"""Fed-Server aggregation: FedAvg, partial participation, straggler
+mitigation, and ZO seed-replay aggregation (gradient compression).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import zo as Z
+
+
+def fedavg(stacked_params, weights=None):
+    """stacked_params: pytree with leading client axis N -> mean tree."""
+    if weights is None:
+        return jax.tree.map(lambda p: jnp.mean(p.astype(jnp.float32),
+                                               axis=0).astype(p.dtype),
+                            stacked_params)
+    w = weights / jnp.maximum(jnp.sum(weights), 1e-9)
+
+    def avg(p):
+        wf = w.reshape((-1,) + (1,) * (p.ndim - 1)).astype(jnp.float32)
+        return jnp.sum(p.astype(jnp.float32) * wf, axis=0).astype(p.dtype)
+
+    return jax.tree.map(avg, stacked_params)
+
+
+def participation_mask(key, n_clients: int, fraction: float):
+    """Sample ceil(fraction*N) participants uniformly (paper Fig. 3c)."""
+    k = max(1, int(round(fraction * n_clients)))
+    perm = jax.random.permutation(key, n_clients)
+    mask = jnp.zeros((n_clients,), jnp.float32).at[perm[:k]].set(1.0)
+    return mask
+
+
+def straggler_mask(key, n_clients: int, fraction: float,
+                   straggler_prob: float = 0.0):
+    """Deadline-based straggler mitigation: over-sample participants and
+    drop simulated stragglers; aggregation weights renormalize over the
+    survivors (elastic: the round proceeds with whoever reported)."""
+    base = participation_mask(key, n_clients, fraction)
+    if straggler_prob <= 0:
+        return base
+    drop = jax.random.bernoulli(jax.random.fold_in(key, 1),
+                                straggler_prob, (n_clients,))
+    survived = base * (1.0 - drop.astype(jnp.float32))
+    # never let every participant drop: fall back to the base mask
+    return jnp.where(jnp.sum(survived) > 0, survived, base)
+
+
+def fedavg_masked(stacked_params, mask, prev_global):
+    """FedAvg over the masked participants; non-participants contribute
+    the previous global params (equivalent to weighting survivors)."""
+    def avg(p, g):
+        m = mask.reshape((-1,) + (1,) * (p.ndim - 1)).astype(jnp.float32)
+        tot = jnp.maximum(jnp.sum(mask), 1.0)
+        return (jnp.sum(p.astype(jnp.float32) * m, axis=0) / tot).astype(
+            p.dtype)
+
+    return jax.tree.map(avg, stacked_params,
+                        jax.tree.map(lambda g: g[None], prev_global))
+
+
+# ---------------------------------------------------------------------------
+# seed-replay aggregation — the ZO gradient-compression uplink
+# ---------------------------------------------------------------------------
+
+def seed_replay_aggregate(global_params, client_keys, client_coeffs,
+                          lr: float, zo: Z.ZOConfig, mask=None):
+    """Reconstruct the FedAvg'd client update from (seed, coeff) uplinks.
+
+    client_keys: (N,) PRNG keys (one per client round); client_coeffs:
+    (N, h, n_pairs) projected-gradient scalars for h local steps.  The
+    aggregated update equals FedAvg of the clients' local ZO trajectories
+    to first order in lr (exact when h==1), at an uplink cost of
+    O(h·n_pairs) floats per client instead of O(d).
+    """
+    n = client_coeffs.shape[0]
+    if mask is None:
+        mask = jnp.ones((n,), jnp.float32)
+    tot = jnp.maximum(jnp.sum(mask), 1.0)
+    out = global_params
+    for i in range(n):
+        for m in range(client_coeffs.shape[1]):
+            key_im = jax.random.fold_in(client_keys[i], m)
+            for p in range(client_coeffs.shape[2]):
+                kp = jax.random.fold_in(key_im, p)
+                u = Z.unit_sphere_like(kp, global_params)
+                scale = -lr * client_coeffs[i, m, p] * mask[i] / tot
+                out = Z.add_scaled(out, u, scale)
+    return out

@@ -1,0 +1,426 @@
+"""SFL training protocols: HERON-SFL (ours) and the paper's baselines
+(SFLV1/V2, CSE-FSL, FSL-SAGE, SplitLoRA), in two execution modes:
+
+* **datacenter step** (`make_train_step`) — one jitted hybrid ZO/FO step
+  on the production mesh; the data-parallel shards act as virtual client
+  cohorts (see DESIGN.md §3).  This is what the multi-pod dry-run lowers.
+* **federated simulation** (`make_fed_round`) — the paper-faithful
+  N-client round: broadcast, h decoupled local steps (vmap over clients),
+  smashed-data uploads every k steps, sequential SFLV2-style server
+  updates, Fed-Server aggregation with partial participation/stragglers.
+
+Both modes are model-agnostic through :class:`ModelAPI` (LM and CNN
+adapters provided).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregate as AG
+from repro.core import zo as Z
+from repro.core.split import combine, partition
+from repro.distributed.sharding import AxisRules
+from repro.models import cnn as CNN
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.optim.optimizers import Optimizer
+
+METHODS = ("heron", "cse_fsl", "fsl_sage", "sflv1", "sflv2", "splitlora")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    """Adapter between a concrete model family and the SFL protocols."""
+    client_loss: Callable   # (client_params, batch) -> (loss, smashed)
+    aux_loss: Callable      # (client_params, smashed, batch) -> loss
+    server_loss: Callable   # (server_params, client_const, smashed, batch) -> loss
+    joint_loss: Callable    # (client_params, server_params, batch) -> loss
+
+
+def lm_api(cfg: ModelConfig, rules: AxisRules) -> ModelAPI:
+    def client_loss(cp, batch):
+        s, _ = T.client_forward(cp, cfg, rules, batch["inputs"],
+                                batch.get("positions"))
+        logits = T.aux_forward(cp, cfg, rules, s, batch.get("positions"))
+        lbl = batch.get("aux_labels", batch["labels"])
+        return T.lm_loss(logits, lbl, cfg.vocab), s
+
+    def aux_loss(cp, smashed, batch):
+        logits = T.aux_forward(cp, cfg, rules, smashed,
+                               batch.get("positions"))
+        lbl = batch.get("aux_labels", batch["labels"])
+        return T.lm_loss(logits, lbl, cfg.vocab)
+
+    def server_loss(sp, cp_const, smashed, batch):
+        logits, _ = T.server_forward(
+            {"client": cp_const, "server": sp}, cfg, rules, smashed,
+            positions=batch.get("positions"),
+            dec_tokens=batch.get("dec_tokens"),
+            dec_positions=batch.get("dec_positions"))
+        return T.lm_loss(logits, batch["labels"], cfg.vocab)
+
+    def joint_loss(cp, sp, batch):
+        s, _ = T.client_forward(cp, cfg, rules, batch["inputs"],
+                                batch.get("positions"))
+        logits, _ = T.server_forward(
+            {"client": cp, "server": sp}, cfg, rules, s,
+            positions=batch.get("positions"),
+            dec_tokens=batch.get("dec_tokens"),
+            dec_positions=batch.get("dec_positions"))
+        return T.lm_loss(logits, batch["labels"], cfg.vocab)
+
+    return ModelAPI(client_loss, aux_loss, server_loss, joint_loss)
+
+
+def cnn_api(cfg: CNN.CNNConfig) -> ModelAPI:
+    def client_loss(cp, batch):
+        s = CNN.client_forward(cp, batch["inputs"], cfg)
+        return CNN.xent(CNN.aux_logits(cp, s, cfg), batch["labels"]), s
+
+    def aux_loss(cp, smashed, batch):
+        return CNN.xent(CNN.aux_logits(cp, smashed, cfg), batch["labels"])
+
+    def server_loss(sp, cp_const, smashed, batch):
+        return CNN.xent(CNN.server_logits(sp, smashed, cfg),
+                        batch["labels"])
+
+    def joint_loss(cp, sp, batch):
+        s = CNN.client_forward(cp, batch["inputs"], cfg)
+        return CNN.xent(CNN.server_logits(sp, s, cfg), batch["labels"])
+
+    return ModelAPI(client_loss, aux_loss, server_loss, joint_loss)
+
+
+# ===========================================================================
+# datacenter hybrid step (what the dry-run lowers)
+# ===========================================================================
+
+def init_train_state(rng, params, client_opt: Optimizer,
+                     server_opt: Optimizer, tc_pred=None, ts_pred=None):
+    tc_pred = tc_pred or (lambda p: True)
+    ts_pred = ts_pred or (lambda p: True)
+    tc, _ = partition(params["client"], tc_pred)
+    ts, _ = partition(params["server"], ts_pred)
+    return {"params": params,
+            "opt_client": client_opt.init(tc),
+            "opt_server": server_opt.init(ts),
+            "step": jnp.zeros((), jnp.int32),
+            "rng": rng}
+
+
+def make_train_step(api: ModelAPI, method: str, zo_cfg: Z.ZOConfig,
+                    client_opt: Optimizer, server_opt: Optimizer,
+                    tc_pred=None, ts_pred=None, align_weight: float = 1.0,
+                    client_shardings=None):
+    """Returns step(state, batch) -> (state, metrics).
+
+    ``client_shardings``: optional pytree of NamedShardings matching the
+    *trainable* client params — pins ZO perturbation generation to the
+    parameter sharding (never replicated on the production mesh).
+    """
+    assert method in METHODS, method
+    tc_pred = tc_pred or (lambda p: True)
+    ts_pred = ts_pred or (lambda p: True)
+
+    def step_fn(state, batch):
+        params = state["params"]
+        key = jax.random.fold_in(state["rng"], state["step"])
+        tc, fc = partition(params["client"], tc_pred)
+        ts, fs = partition(params["server"], ts_pred)
+        metrics: dict[str, Any] = {}
+
+        if method in ("sflv1", "sflv2", "splitlora"):
+            # end-to-end FO: the server's cut-layer gradient reaches the
+            # client (training lock; 2pq communication per batch).
+            def jloss(args):
+                tcx, tsx = args
+                return api.joint_loss(combine(tcx, fc),
+                                      combine(tsx, fs), batch)
+
+            loss, (g_c, g_s) = jax.value_and_grad(jloss)((tc, ts))
+            metrics["loss"] = metrics["client_loss"] = loss
+        else:
+            def closs(tcx):
+                return api.client_loss(combine(tcx, fc), batch)
+
+            if method == "heron":
+                # --- the paper's technique: forward-only ZO client ---
+                g_c, info = Z.zo_gradient(closs, tc, key, zo_cfg,
+                                          shardings=client_shardings)
+                c_loss, smashed = info["loss"], info["aux"]
+                metrics["zo_coeff_abs"] = jnp.mean(
+                    jnp.abs(info["coeffs"]))
+            else:  # cse_fsl / fsl_sage: FO client via the aux head
+                (c_loss, smashed), g_c = jax.value_and_grad(
+                    closs, has_aux=True)(tc)
+            smashed_sg = jax.lax.stop_gradient(smashed)
+            cp_const = jax.lax.stop_gradient(params["client"])
+
+            def sloss(tsx):
+                return api.server_loss(combine(tsx, fs), cp_const,
+                                       smashed_sg, batch)
+
+            s_loss, g_s = jax.value_and_grad(sloss)(ts)
+            if method == "fsl_sage":
+                # align the aux head's cut-layer gradient with the
+                # server's true cut-layer gradient (SAGE estimator).
+                g_cut_srv = jax.lax.stop_gradient(jax.grad(
+                    lambda s: api.server_loss(combine(ts, fs), cp_const,
+                                              s, batch))(smashed_sg))
+
+                def align(tcx):
+                    g_cut_aux = jax.grad(
+                        lambda s: api.aux_loss(combine(tcx, fc), s,
+                                               batch))(smashed_sg)
+                    return jnp.mean(jnp.square(
+                        g_cut_aux.astype(jnp.float32)
+                        - g_cut_srv.astype(jnp.float32)))
+
+                g_align = jax.grad(align)(tc)
+                g_c = jax.tree.map(
+                    lambda a, b: a + align_weight * b, g_c, g_align)
+            metrics["loss"] = s_loss
+            metrics["client_loss"] = c_loss
+
+        new_tc, oc = client_opt.update(g_c, state["opt_client"], tc)
+        new_ts, os_ = server_opt.update(g_s, state["opt_server"], ts)
+        new_state = {
+            "params": {"client": combine(new_tc, fc),
+                       "server": combine(new_ts, fs)},
+            "opt_client": oc,
+            "opt_server": os_,
+            "step": state["step"] + 1,
+            "rng": state["rng"],
+        }
+        return new_state, metrics
+
+    return step_fn
+
+
+# ===========================================================================
+# inference steps (prefill / decode) — serving the assembled global model
+# ===========================================================================
+
+def make_prefill_step(cfg: ModelConfig, rules: AxisRules):
+    def prefill(params, batch):
+        logits = T.full_forward(params, cfg, rules, batch["inputs"],
+                                batch.get("positions"),
+                                batch.get("dec_tokens"))
+        return logits
+
+    return prefill
+
+
+def init_serve_caches(cfg: ModelConfig, batch: int, seq: int):
+    if cfg.enc_dec:
+        return {
+            "dec": T.init_stack_cache(cfg, T.decoder_specs(cfg), batch,
+                                      seq),
+            "enc_out": jnp.zeros((batch, seq, cfg.d_model),
+                                 cfg.jnp_compute_dtype()),
+        }
+    return {
+        "client": T.init_stack_cache(cfg, T.client_specs(cfg), batch, seq),
+        "server": T.init_stack_cache(cfg, T.server_specs(cfg), batch, seq),
+    }
+
+
+def make_serve_step(cfg: ModelConfig, rules: AxisRules):
+    """One decode step: (params, caches, token) -> (logits, caches)."""
+    from repro.models import layers as L
+
+    def serve(params, caches, token):
+        if cfg.enc_dec:
+            y = L.embed(params["server"]["dec_embed"], token,
+                        cfg.jnp_compute_dtype())
+            y, dec_c = T.apply_stack(
+                params["server"]["decoder"], y, cfg, rules,
+                T.decoder_specs(cfg), caches=caches["dec"], decode=True,
+                enc_out=caches["enc_out"])
+            y = T._norm(cfg, params["server"]["final_norm"], y)
+            logits = L.unembed(params["client"]["embed"], y, jnp.float32)
+            return (L.softcap(logits, cfg.final_softcap),
+                    {"dec": dec_c, "enc_out": caches["enc_out"]})
+        x = T.embed_inputs(params["client"], cfg, token)
+        x, cc = T.apply_stack(params["client"]["layers"], x, cfg, rules,
+                              T.client_specs(cfg), caches=caches["client"],
+                              decode=True)
+        x, sc = T.apply_stack(params["server"]["layers"], x, cfg, rules,
+                              T.server_specs(cfg), caches=caches["server"],
+                              decode=True)
+        x = T._norm(cfg, params["server"]["final_norm"], x)
+        if cfg.tie_embeddings:
+            logits = L.unembed(params["client"]["embed"], x, jnp.float32)
+        else:
+            logits = x.astype(jnp.float32) @ params["server"][
+                "unembed"].astype(jnp.float32)
+        return (L.softcap(logits, cfg.final_softcap),
+                {"client": cc, "server": sc})
+
+    return serve
+
+
+# ===========================================================================
+# federated simulation (paper-faithful N-client rounds)
+# ===========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class FedConfig:
+    n_clients: int = 5
+    h: int = 4                    # local steps per round
+    upload_every: int = 1         # k: smashed upload period
+    participation: float = 1.0
+    straggler_prob: float = 0.0
+    sequential_server: bool = True
+    quantize_uplink: bool = False  # int8 smashed-data upload (pq/2)
+
+
+def make_fed_round(api: ModelAPI, method: str, zo_cfg: Z.ZOConfig,
+                   fed: FedConfig, client_opt: Optimizer,
+                   server_opt: Optimizer):
+    """Returns round(state, round_batch, key) -> (state, metrics).
+
+    state = {"client": global client params, "server": server params,
+             "opt_server": ...}
+    round_batch: pytree with leading (N, h, ...) dims; for enc-dec /
+    aux-label tasks include the extra fields per ModelAPI.
+    """
+    assert method in METHODS
+
+    def local_update(cp, oc, batch, key):
+        def closs(cpx):
+            return api.client_loss(cpx, batch)
+
+        if method == "heron":
+            g, info = Z.zo_gradient(closs, cp, key, zo_cfg)
+            loss, smashed = info["loss"], info["aux"]
+        else:
+            (loss, smashed), g = jax.value_and_grad(closs, has_aux=True)(cp)
+        cp, oc = client_opt.update(g, oc, cp)
+        return cp, oc, smashed, loss
+
+    def round_fn(state, round_batch, key):
+        N, h = fed.n_clients, fed.h
+        cp0 = jax.tree.map(
+            lambda p: jnp.broadcast_to(p[None], (N,) + p.shape),
+            state["client"])
+        oc0 = jax.vmap(client_opt.init)(cp0)
+
+        if method in ("sflv1", "sflv2", "splitlora"):
+            return _fo_locked_round(api, method, fed, client_opt,
+                                    server_opt, state, round_batch, key)
+
+        def step_m(carry, m):
+            cps, ocs = carry
+            batch_m = jax.tree.map(lambda x: jnp.take(x, m, axis=1),
+                                   round_batch)
+            keys = jax.vmap(
+                lambda i: jax.random.fold_in(
+                    jax.random.fold_in(key, m), i))(jnp.arange(N))
+            cps, ocs, smashed, losses = jax.vmap(
+                local_update, in_axes=(0, 0, 0, 0))(cps, ocs, batch_m,
+                                                    keys)
+            return (cps, ocs), (smashed, losses)
+
+        (cps, _), (smashed_all, losses) = jax.lax.scan(
+            step_m, (cp0, oc0), jnp.arange(h))
+        # uploads every k local steps (static selection)
+        upload_ms = [m for m in range(h) if m % fed.upload_every == 0]
+        sp, os_ = state["server"], state["opt_server"]
+        s_losses = []
+        cp_const = jax.lax.stop_gradient(state["client"])
+        for m in upload_ms:
+            batch_m = jax.tree.map(lambda x: x[:, m], round_batch)
+            smashed_m = jax.tree.map(lambda s: s[m], smashed_all)
+            if fed.quantize_uplink:
+                from repro.core.split import (dequantize_smashed,
+                                              quantize_smashed)
+                qm, sc = quantize_smashed(smashed_m)
+                smashed_m = dequantize_smashed(qm, sc,
+                                               smashed_m.dtype)
+
+            def server_client_step(carry, i):
+                spx, osx = carry
+                sm = jax.tree.map(lambda s: jnp.take(s, i, axis=0),
+                                  smashed_m)
+                bt = jax.tree.map(lambda x: jnp.take(x, i, axis=0),
+                                  batch_m)
+                sl, g = jax.value_and_grad(
+                    lambda p: api.server_loss(p, cp_const,
+                                              jax.lax.stop_gradient(sm),
+                                              bt))(spx)
+                spx, osx = server_opt.update(g, osx, spx)
+                return (spx, osx), sl
+
+            (sp, os_), sls = jax.lax.scan(server_client_step, (sp, os_),
+                                          jnp.arange(N))
+            s_losses.append(sls)
+        # Fed-Server aggregation with participation / stragglers
+        mask = AG.straggler_mask(jax.random.fold_in(key, 777), N,
+                                 fed.participation, fed.straggler_prob)
+        new_client = AG.fedavg_masked(cps, mask, state["client"])
+        metrics = {"client_loss": jnp.mean(losses),
+                   "server_loss": jnp.mean(jnp.stack(s_losses)),
+                   "participants": jnp.sum(mask)}
+        return ({"client": new_client, "server": sp, "opt_server": os_},
+                metrics)
+
+    return round_fn
+
+
+def _fo_locked_round(api, method, fed, client_opt, server_opt, state,
+                     round_batch, key):
+    """SFLV1/V2 (and SplitLoRA): no aux net — the client waits for the
+    server's cut-layer gradient (training lock).  Clients are processed
+    sequentially against the shared server model (SFLV2) or per-client
+    server replicas aggregated at round end (SFLV1)."""
+    N, h = fed.n_clients, fed.h
+    v1 = method == "sflv1"
+
+    def client_loop(carry, i):
+        sp, os_ = carry
+        cp = state["client"]
+        oc = client_opt.init(cp)
+
+        def step_m(c2, m):
+            cpx, ocx, spx, osx = c2
+            bt = jax.tree.map(lambda x: jnp.take(jnp.take(x, i, axis=0),
+                                                 m, axis=0), round_batch)
+            (loss, (g_c, g_s)) = jax.value_and_grad(
+                lambda args: api.joint_loss(args[0], args[1], bt))(
+                    (cpx, spx))
+            cpx, ocx = client_opt.update(g_c, ocx, cpx)
+            spx, osx = server_opt.update(g_s, osx, spx)
+            return (cpx, ocx, spx, osx), loss
+
+        (cp, oc, sp, os_), losses = jax.lax.scan(
+            step_m, (cp, oc, sp, os_), jnp.arange(h))
+        return (sp, os_), (cp, losses)
+
+    if v1:
+        # independent server replicas per client, averaged afterwards
+        def one_client(i):
+            (sp_i, _), (cp_i, losses) = client_loop(
+                (state["server"], state["opt_server"]), i)
+            return cp_i, sp_i, losses
+
+        cps, sps, losses = jax.vmap(one_client)(jnp.arange(N))
+        sp = AG.fedavg(sps)
+        os_ = state["opt_server"]
+    else:
+        (sp, os_), (cps, losses) = jax.lax.scan(
+            client_loop, (state["server"], state["opt_server"]),
+            jnp.arange(N))
+    mask = AG.straggler_mask(jax.random.fold_in(key, 777), N,
+                             fed.participation, fed.straggler_prob)
+    new_client = AG.fedavg_masked(cps, mask, state["client"])
+    metrics = {"client_loss": jnp.mean(losses),
+               "server_loss": jnp.mean(losses),
+               "participants": jnp.sum(mask)}
+    return ({"client": new_client, "server": sp, "opt_server": os_},
+            metrics)

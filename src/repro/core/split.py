@@ -1,0 +1,113 @@
+"""Model splitting & parameter-partition utilities for SFL.
+
+The structural split (client = embed + first ``cut_layers`` blocks + aux
+head; server = rest) lives in models/transformer.py.  This module adds:
+
+* path-based trainable/frozen partitioning (LoRA fine-tuning, freezing
+  embeddings from ZO perturbation, ...);
+* parameter counting and the Table-I style resource accounting;
+* optional int8 quantization of the smashed data (cut-layer upload) —
+  halves the paper's ``pq`` communication term.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# path-based partition
+# ---------------------------------------------------------------------------
+
+def _paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in path) for path, _ in flat]
+
+
+def partition(tree, predicate: Callable[[str], bool]):
+    """Split a pytree into (selected, rest) by path predicate; structure
+    is preserved with None placeholders (mergeable via :func:`combine`)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    sel, rest = [], []
+    for path, leaf in flat:
+        p = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in path)
+        if predicate(p):
+            sel.append(leaf)
+            rest.append(None)
+        else:
+            sel.append(None)
+            rest.append(leaf)
+    return (jax.tree.unflatten(treedef, sel),
+            jax.tree.unflatten(treedef, rest))
+
+
+def combine(a, b):
+    """Inverse of :func:`partition` (None-aware merge)."""
+    return jax.tree.map(lambda x, y: x if x is not None else y, a, b,
+                        is_leaf=lambda x: x is None)
+
+
+def count_params(tree) -> int:
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(tree)
+                   if l is not None))
+
+
+def param_bytes(tree) -> int:
+    return int(sum(np.prod(l.shape) * jnp.dtype(l.dtype).itemsize
+                   for l in jax.tree.leaves(tree) if l is not None))
+
+
+# ---------------------------------------------------------------------------
+# smashed-data quantization (communication compression on the cut layer)
+# ---------------------------------------------------------------------------
+
+def quantize_smashed(x, enabled: bool = True):
+    """Symmetric per-(batch,seq) int8 quantization of cut activations."""
+    if not enabled:
+        return x, None
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_smashed(q, scale, dtype):
+    if scale is None:
+        return q
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Table-I style per-step client resource accounting
+# ---------------------------------------------------------------------------
+
+def client_costs(method: str, *, p_batch_bytes: int, q_smashed_bytes: int,
+                 client_params: int, aux_params: int, f_c: float,
+                 f_a: float, n_pairs: int = 1, bytes_per_param: int = 4):
+    """Analytic per-local-update client costs (paper Table I).
+
+    Returns dict(comm_bytes, peak_mem_bytes, flops).  Peak memory for FO
+    methods scales with the activation footprint of the locally-trained
+    stack (~O(|θ|) proxy per the paper); HERON's is O(1) extra over
+    inference."""
+    pc, pa = client_params * bytes_per_param, aux_params * bytes_per_param
+    pq = q_smashed_bytes
+    if method in ("sflv1", "sflv2"):
+        return {"comm_bytes": 2 * pq + 2 * pc,
+                "peak_mem_bytes": 2 * pc,
+                "flops": 3 * f_c}
+    if method in ("cse_fsl", "fsl_sage", "splitlora"):
+        return {"comm_bytes": pq + 2 * (pc + pa),
+                "peak_mem_bytes": 2 * (pc + pa),
+                "flops": 3 * (f_c + f_a)}
+    if method == "heron":
+        return {"comm_bytes": pq + 2 * (pc + pa),
+                "peak_mem_bytes": pc + pa,   # inference-level: params only
+                "flops": (1 + n_pairs) * (f_c + f_a)}
+    raise ValueError(method)

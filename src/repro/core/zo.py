@@ -1,0 +1,144 @@
+"""Zeroth-order (ZO) optimization core — the paper's central mechanism.
+
+Implements the two-point ZO gradient estimator of Eq. (2):
+
+    g_hat = (d/mu) * [ l(theta + mu*u; xi) - l(theta; xi) ] * u,
+    u ~ Unif(S^{d-1})
+
+with
+
+* seed-procedural perturbations (MeZO-style): ``u`` is a deterministic
+  function of a PRNG key — never stored, always regenerated, so a client
+  update can be *communicated* as ``(seed, coeff)`` pairs (seed-replay
+  aggregation, see core/aggregate.py);
+* n-pair variance reduction (paper Fig. 4: 2 perturbations/epoch suffice);
+* a trainable-subtree filter so LoRA fine-tuning perturbs adapters only.
+
+On TPU the perturbed forward is additionally served by the
+``kernels/zo_matmul`` Pallas kernel which generates ``u`` tile-by-tile in
+VMEM (zero HBM traffic for perturbations); this module is the
+framework-level, backend-agnostic path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ZOConfig:
+    mu: float = 1e-3
+    n_pairs: int = 1            # number of two-point perturbation pairs
+    scale: str = "sphere"       # sphere (Eq. 2, with d factor) | gaussian
+
+
+# ---------------------------------------------------------------------------
+# tree-level perturbation utilities
+# ---------------------------------------------------------------------------
+
+def tree_size(tree) -> int:
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(tree)))
+
+
+def normal_like(key, tree, shardings=None):
+    """Per-leaf standard normals, deterministic in (key, tree structure).
+
+    ``shardings`` (optional matching pytree of NamedShardings/None) pins
+    each perturbation leaf to its parameter's sharding so that on a big
+    mesh the direction is *generated* sharded — never replicated in HBM.
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    shard_leaves = (jax.tree.leaves(
+        shardings, is_leaf=lambda x: x is None)
+        if shardings is not None else [None] * len(leaves))
+    if len(shard_leaves) != len(leaves):
+        shard_leaves = [None] * len(leaves)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    zs = []
+    for k, l, sh in zip(keys, leaves, shard_leaves):
+        z = jax.random.normal(k, l.shape, jnp.float32)
+        if sh is not None:
+            z = jax.lax.with_sharding_constraint(z, sh)
+        zs.append(z)
+    return jax.tree.unflatten(treedef, zs)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(tree)) + 1e-30)
+
+
+def unit_sphere_like(key, tree, shardings=None):
+    """u ~ Unif(S^{d-1}) over the flattened tree (||u||_2 = 1)."""
+    z = normal_like(key, tree, shardings)
+    nrm = global_norm(z)
+    return jax.tree.map(lambda l: l / nrm, z)
+
+
+def add_scaled(params, direction, scale):
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32)
+                      + scale * u.astype(jnp.float32)).astype(p.dtype),
+        params, direction)
+
+
+# ---------------------------------------------------------------------------
+# the two-point estimator
+# ---------------------------------------------------------------------------
+
+def zo_gradient(loss_fn: Callable, params, key, zo: ZOConfig,
+                shardings=None):
+    """Two-point ZO gradient estimate of ``loss_fn`` at ``params``.
+
+    ``loss_fn(params) -> (scalar loss, aux)``; the mini-batch is closed
+    over (Eq. 2 uses one shared ``u`` across the batch).  Returns
+    (grad_tree, info) where info carries the clean loss/aux and the
+    projected-gradient coefficients (for seed-replay uplink).
+
+    Cost: ``1 + n_pairs`` forward passes, zero backward passes — this is
+    the client-side FLOP reduction of Table I (2(F_c+F_a) at n_pairs=1).
+    """
+    d = tree_size(params)
+    l0, aux0 = loss_fn(params)
+    g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    coeffs = []
+    for p in range(zo.n_pairs):
+        kp = jax.random.fold_in(key, p)
+        u = (unit_sphere_like(kp, params, shardings)
+             if zo.scale == "sphere"
+             else normal_like(kp, params, shardings))
+        lp, _ = loss_fn(add_scaled(params, u, zo.mu))
+        dim_factor = float(d) if zo.scale == "sphere" else 1.0
+        coeff = dim_factor * (lp - l0) / zo.mu / zo.n_pairs
+        coeffs.append(coeff)
+        g = jax.tree.map(lambda gl, ul: gl + coeff * ul, g, u)
+    info = {"loss": l0, "aux": aux0,
+            "coeffs": jnp.stack(coeffs) if coeffs else jnp.zeros((0,))}
+    return g, info
+
+
+def zo_projected_coeffs(loss_fn: Callable, params, key, zo: ZOConfig):
+    """Lean-uplink form: returns only the scalar coefficients (one per
+    pair).  Combined with the shared ``key`` this *is* the client->server
+    message — O(n_pairs) floats instead of O(d)."""
+    _, info = zo_gradient(loss_fn, params, key, zo)
+    return info["coeffs"], info["loss"]
+
+
+def replay_update(params, key, coeffs, lr, zo: ZOConfig):
+    """Server-side (or on-device, streaming) reconstruction of the ZO
+    update from (key, coeffs): theta <- theta - lr * sum_p coeff_p u_p.
+    Regenerates each u from the seed; never stores the full direction
+    alongside more than one leaf at a time."""
+    n = coeffs.shape[0]
+    out = params
+    for p in range(n):
+        kp = jax.random.fold_in(key, p)
+        u = (unit_sphere_like(kp, params) if zo.scale == "sphere"
+             else normal_like(kp, params))
+        out = add_scaled(out, u, -lr * coeffs[p])
+    return out

@@ -1,0 +1,19 @@
+"""Non-IID client partitioning (Dirichlet label skew, paper Fig. 3a)."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def dirichlet_client_probs(n_clients: int, n_classes: int, alpha: float,
+                           seed: int = 0):
+    """(N, C) per-client class distributions; alpha -> inf is IID."""
+    rng = np.random.default_rng(seed)
+    if alpha <= 0 or not np.isfinite(alpha):
+        return jnp.full((n_clients, n_classes), 1.0 / n_classes)
+    probs = rng.dirichlet([alpha] * n_classes, size=n_clients)
+    return jnp.asarray(probs, jnp.float32)
+
+
+def iid_client_probs(n_clients: int, n_classes: int):
+    return jnp.full((n_clients, n_classes), 1.0 / n_classes)

@@ -1,0 +1,40 @@
+"""Host->device batching with sharding placement.
+
+For datacenter runs the global batch is placed with its NamedSharding
+(batch over the data axes).  For federated simulation the round batch
+carries leading (N, h) dims built from per-client streams.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import AxisRules
+
+
+def place_batch(batch, rules: AxisRules):
+    if rules.mesh is None:
+        return batch
+
+    def put(x):
+        logical = ("batch",) + (None,) * (x.ndim - 1)
+        return jax.device_put(x, rules.sharding_for(x.shape, logical))
+
+    return jax.tree.map(put, batch)
+
+
+def round_batches(dataset, key, n_clients: int, h: int, batch_size: int,
+                  client_probs=None):
+    """Build a federated round batch with leading (N, h) dims."""
+    def one(i, m):
+        k = jax.random.fold_in(jax.random.fold_in(key, i), m)
+        if client_probs is not None:
+            return dataset.batch(k, batch_size, client_probs[i])
+        return dataset.batch(k, batch_size)
+
+    per_client = []
+    for i in range(n_clients):
+        per_step = [one(i, m) for m in range(h)]
+        per_client.append(jax.tree.map(lambda *xs: jnp.stack(xs),
+                                       *per_step))
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *per_client)

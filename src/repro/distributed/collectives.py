@@ -1,0 +1,67 @@
+"""Gradient-compression collectives (distributed-optimization tricks).
+
+The paper's ZO client path already compresses its uplink to (seed,
+scalar) pairs (core/aggregate.seed_replay_aggregate — the extreme case).
+For the FO *server* path this module provides the standard compressors
+used before cross-pod reduction, with error feedback so compression
+noise doesn't accumulate:
+
+* ``topk_sparsify``   — keep the k largest-|.| entries per tensor
+* ``quantize_int8``   — symmetric per-tensor int8
+* ``ErrorFeedback``   — residual accumulator (Karimireddy et al.)
+
+All pure-functional and jit-able; tests in tests/test_collectives.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def topk_sparsify(g, frac: float):
+    """Zero all but the ceil(frac * n) largest-|.| entries (per leaf)."""
+    def one(x):
+        n = x.size
+        k = max(1, int(np.ceil(frac * n))) if n else 0
+        flat = jnp.abs(x.reshape(-1))
+        thresh = jax.lax.top_k(flat, k)[0][-1]
+        return jnp.where(jnp.abs(x) >= thresh, x, 0.0)
+
+    return jax.tree.map(one, g)
+
+
+def quantize_int8(g):
+    """(q, scales) symmetric per-leaf int8."""
+    def one(x):
+        amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12)
+        scale = amax / 127.0
+        q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+        return q, scale
+
+    leaves, treedef = jax.tree.flatten(g)
+    qs, scales = zip(*[one(l) for l in leaves]) if leaves else ((), ())
+    return jax.tree.unflatten(treedef, qs), list(scales)
+
+
+def dequantize_int8(q, scales):
+    leaves, treedef = jax.tree.flatten(q)
+    out = [l.astype(jnp.float32) * s for l, s in zip(leaves, scales)]
+    return jax.tree.unflatten(treedef, out)
+
+
+@dataclasses.dataclass(frozen=True)
+class ErrorFeedback:
+    """Residual-corrected compression: compress(g + e), e' = g + e - c."""
+
+    def init(self, g):
+        return jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), g)
+
+    def compress(self, g, err, compressor):
+        corrected = jax.tree.map(
+            lambda a, b: a.astype(jnp.float32) + b, g, err)
+        c = compressor(corrected)
+        new_err = jax.tree.map(lambda a, b: a - b, corrected, c)
+        return c, new_err

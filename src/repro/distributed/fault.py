@@ -1,0 +1,84 @@
+"""Fault tolerance & elasticity utilities.
+
+Three layers, all exercised by tests:
+
+* **step-level resilience** — :func:`run_resilient` wraps a training loop
+  with checkpoint/restart: any step that raises (device loss, preemption,
+  injected fault) rolls back to the last checkpoint and replays; the
+  deterministic data streams (data/synthetic.py are pure functions of
+  (seed, step)) make the replay exact.
+* **cluster-level elasticity** — :func:`remesh` rebuilds the mesh from
+  the devices currently visible; FedAvg aggregation is count-weighted,
+  so a changed data-parallel width between rounds is mathematically
+  benign (DESIGN.md §5).
+* **client-level straggler handling** — deadline-based over-sampling
+  lives in core/aggregate.py (straggler_mask); this module adds the
+  failure *injector* used to test it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.checkpoint import checkpoint as CKPT
+
+
+@dataclasses.dataclass
+class FaultInjector:
+    """Deterministic fault schedule for tests/drills: raises on the
+    configured step numbers (once each)."""
+    fail_at: tuple[int, ...] = ()
+    _fired: set = dataclasses.field(default_factory=set)
+
+    def check(self, step: int):
+        if step in self.fail_at and step not in self._fired:
+            self._fired.add(step)
+            raise RuntimeError(f"injected fault at step {step}")
+
+
+def remesh(model_parallel: int = 1):
+    """Elastic mesh from the currently-visible devices."""
+    n = jax.device_count()
+    mp = model_parallel if model_parallel > 0 and n % model_parallel == 0 \
+        else 1
+    return jax.make_mesh((n // mp, mp), ("data", "model"))
+
+
+def run_resilient(step_fn: Callable, state, batch_fn: Callable,
+                  n_steps: int, ckpt_dir: str, ckpt_every: int = 10,
+                  injector: FaultInjector | None = None,
+                  max_retries: int = 5, start_step: int = 0):
+    """Run ``n_steps`` of ``state, metrics = step_fn(state, batch)`` with
+    checkpoint/replay on failure.
+
+    ``batch_fn(step) -> batch`` must be deterministic in ``step`` (replay
+    exactness).  Returns (state, last_metrics, n_restarts).
+    """
+    step = start_step
+    restored = CKPT.latest_step(ckpt_dir)
+    if restored is not None:
+        state, step = CKPT.restore(ckpt_dir, state)
+    restarts = 0
+    metrics = {}
+    while step < n_steps:
+        try:
+            if injector is not None:
+                injector.check(step)
+            state, metrics = step_fn(state, batch_fn(step))
+            step += 1
+            if step % ckpt_every == 0:
+                CKPT.save(ckpt_dir, step, state)
+        except Exception:
+            restarts += 1
+            if restarts > max_retries:
+                raise
+            last = CKPT.latest_step(ckpt_dir)
+            if last is not None:
+                state, step = CKPT.restore(ckpt_dir, state)
+            # else: replay from start_step with the same streams
+    CKPT.save(ckpt_dir, step, state)
+    return state, metrics, restarts

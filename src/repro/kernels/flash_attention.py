@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: blocked flash attention (online softmax) with GQA,
+causal masking, local windows, and gemma2-style logit soft-capping.
+
+Grid: (B * H, nq, nk) — the kv loop innermost; m/l/acc live in VMEM
+scratch and persist across kv steps (sequential TPU grid).  The kv-head
+BlockSpec index map folds the GQA group: q head h reads kv head
+h // (H // Kv).
+
+The pure-XLA equivalent used by the model stack is
+``repro.models.attention.blocked_attention``; this kernel is the TPU
+hot-path with explicit VMEM tiling.  Validated in interpret mode against
+``ref.flash_attention_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+               nk: int, bq: int, bk: int, causal: bool, window: int,
+               cap: float, scale: float, seq_kv: int):
+    ki = pl.program_id(2)
+    qi = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                   # (bq, D)
+    k = k_ref[0].astype(jnp.float32)                   # (bk, D)
+    v = v_ref[0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if cap > 0:
+        s = cap * jnp.tanh(s / cap)
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kv_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kv_pos < seq_kv                             # padding
+    if causal:
+        mask &= q_pos >= kv_pos
+    if window > 0:
+        mask &= (q_pos - kv_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "cap", "scale", "bq", "bk", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, cap=0.0,
+                    scale=None, bq=512, bk=512, interpret=True):
+    """q: (B, Sq, H, D); k, v: (B, Skv, Kv, D) -> (B, Sq, H, D)."""
+    B, Sq, H, D = q.shape
+    Skv, Kv = k.shape[1], k.shape[2]
+    G = H // Kv
+    scale = float(scale) if scale is not None else D ** -0.5
+    bq = min(bq, Sq)
+    bk = min(bk, Skv)
+    assert Sq % bq == 0, (Sq, bq)
+    nk = -(-Skv // bk)
+    Skv_p = nk * bk
+    kp = jnp.pad(k, ((0, 0), (0, Skv_p - Skv), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Skv_p - Skv), (0, 0), (0, 0)))
+    nq = Sq // bq
+    # (BH, S, D) layouts
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+    kf = kp.transpose(0, 2, 1, 3).reshape(B * Kv, Skv_p, D)
+    vf = vp.transpose(0, 2, 1, 3).reshape(B * Kv, Skv_p, D)
+
+    def kv_index(bh, qi, ki):
+        b = bh // H
+        h = bh % H
+        return b * Kv + h // G, ki, 0
+
+    kernel = functools.partial(
+        _fa_kernel, nk=nk, bq=bq, bk=bk, causal=causal, window=window,
+        cap=float(cap), scale=scale, seq_kv=Skv)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, D), kv_index),
+            pl.BlockSpec((1, bk, D), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)

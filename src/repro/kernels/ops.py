@@ -1,0 +1,49 @@
+"""jit'd wrappers over the Pallas kernels with backend dispatch.
+
+On CPU (this container) the kernels execute in ``interpret=True`` mode
+for correctness validation; on TPU they compile natively.  The model
+stack's pure-XLA paths remain the default — these ops are the TPU
+hot-path entry points.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as FA
+from repro.kernels import rg_lru as RG
+from repro.kernels import zo_matmul as ZM
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def zo_matmul(x, w, seed, mu, **kw):
+    """Fused perturbed matmul y = x @ (W + mu*U(seed))."""
+    kw.setdefault("interpret", _interpret())
+    return ZM.zo_matmul(x, w, seed, mu, **kw)
+
+
+def zo_dual_forward(x, w, seed, mu, **kw):
+    """(clean, perturbed) pair for the two-point estimator — one HBM
+    read of W serves both in the fused TPU path."""
+    kw.setdefault("interpret", _interpret())
+    clean = ZM.zo_matmul(x, w, seed, 0.0, perturb=False, **kw)
+    pert = ZM.zo_matmul(x, w, seed, mu, perturb=True, **kw)
+    return clean, pert
+
+
+def zo_noise(w, seed, **kw):
+    kw.setdefault("interpret", _interpret())
+    return ZM.zo_noise(w, seed, **kw)
+
+
+def flash_attention(q, k, v, **kw):
+    kw.setdefault("interpret", _interpret())
+    return FA.flash_attention(q, k, v, **kw)
+
+
+def rg_lru_scan(a, b, **kw):
+    kw.setdefault("interpret", _interpret())
+    return RG.rg_lru_scan(a, b, **kw)

@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def zo_matmul_ref(x, w, u, mu):
+    """y = x @ (W + mu*U) with U materialized explicitly."""
+    wf = w.astype(jnp.float32) + jnp.float32(mu) * u.astype(jnp.float32)
+    return (x.astype(jnp.float32) @ wf).astype(x.dtype)
+
+
+def matmul_ref(x, w):
+    return (x.astype(jnp.float32) @ w.astype(jnp.float32)).astype(x.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, cap=0.0,
+                        scale=None):
+    """Naive full-score attention with GQA/local/softcap semantics."""
+    B, Sq, H, D = q.shape
+    Kv = k.shape[2]
+    G = H // Kv
+    scale = scale if scale is not None else D ** -0.5
+    qr = q.reshape(B, Sq, Kv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qr, k.astype(jnp.float32)) * scale
+    if cap and cap > 0:
+        s = cap * jnp.tanh(s / cap)
+    q_pos = jnp.arange(Sq)[:, None]
+    kv_pos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= q_pos >= kv_pos
+    if window and window > 0:
+        mask &= (q_pos - kv_pos) < window
+    s = jnp.where(mask[None, None, None], s, -2.0e38)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def rg_lru_scan_ref(a, b):
+    """Sequential reference for h_t = a_t h_{t-1} + b_t."""
+    def step(h, ab):
+        a_t, b_t = ab
+        h = a_t * h + b_t
+        return h, h
+
+    a_t = jnp.moveaxis(a, 1, 0)
+    b_t = jnp.moveaxis(b, 1, 0)
+    h0 = jnp.zeros_like(a[:, 0])
+    _, hs = jax.lax.scan(step, h0, (a_t, b_t))
+    return jnp.moveaxis(hs, 0, 1).astype(a.dtype)

@@ -1,0 +1,146 @@
+"""Pallas TPU kernel: fused ZO-perturbed matmul  y = x @ (W + mu * U(seed)).
+
+The TPU-native adaptation of the paper's lean-client mechanism (DESIGN.md
+§3): the perturbation U is generated *tile-by-tile in VMEM* from the
+on-core PRNG (`pltpu.prng_seed` / `prng_random_bits`) while the tile is
+being fed to the MXU — U never exists in HBM, so the perturbed forward
+pass costs exactly the HBM traffic of an ordinary matmul.  Regenerating
+U from the same seed reproduces the same direction (seed-replay).
+
+U entries are uniform(-sqrt(3), +sqrt(3)) (unit variance); the paper's
+estimator admits uniform-ball perturbations, and a uniform tile is one
+multiply-add from raw PRNG bits, keeping the generator off the critical
+MXU path.  Bits come from a counter-based murmur3-style hash of
+(seed, tile, lane) — stateless, so it runs identically in interpret
+mode (CPU validation) and compiled on TPU; ``use_hw_prng=True`` switches
+to the hardware PRNG (`pltpu.prng_random_bits`) on real TPUs.
+
+Grid: (nm, nn, nk) with the k loop innermost; an f32 VMEM scratch
+accumulates partial products across k steps (TPU grid iteration is
+sequential, so scratch carries state).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+SQRT3 = 1.7320508075688772
+
+
+def _tile_seed(base_seed, ki, ni, nk):
+    # unique per (k, n) tile of W; independent of the m (row) block
+    return base_seed + (ni * nk + ki) * 1000003
+
+
+def _hash_bits(tile_seed, shape):
+    """Counter-based stateless RNG (murmur3 finalizer over lane ids)."""
+    r = jax.lax.broadcasted_iota(jnp.uint32, shape, 0)
+    c = jax.lax.broadcasted_iota(jnp.uint32, shape, 1)
+    x = (r * jnp.uint32(0x9E3779B9)) ^ (c * jnp.uint32(0x85EBCA6B))
+    x = x ^ tile_seed.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return x
+
+
+def _uniform_tile(tile_seed, shape, use_hw_prng: bool = False):
+    if use_hw_prng:
+        pltpu.prng_seed(tile_seed)
+        bits = pltpu.prng_random_bits(shape).astype(jnp.uint32)
+    else:
+        bits = _hash_bits(tile_seed, shape)
+    u01 = bits.astype(jnp.float32) * (1.0 / 4294967296.0)
+    return (u01 * 2.0 - 1.0) * SQRT3
+
+
+def _zo_matmul_kernel(seed_ref, mu_ref, x_ref, w_ref, o_ref, acc_ref, *,
+                      nk: int, gen_noise: bool, use_hw_prng: bool = False):
+    ki = pl.program_id(2)
+    ni = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = w_ref[...].astype(jnp.float32)
+    if gen_noise:
+        u = _uniform_tile(_tile_seed(seed_ref[0], ki, ni, nk),
+                          w_ref.shape, use_hw_prng)
+        w = w + mu_ref[0] * u
+    acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32), w,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _noise_kernel(seed_ref, u_ref, *, nk: int, use_hw_prng: bool = False):
+    ki = pl.program_id(1)
+    ni = pl.program_id(0)
+    u_ref[...] = _uniform_tile(_tile_seed(seed_ref[0], ki, ni, nk),
+                               u_ref.shape, use_hw_prng).astype(u_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk",
+                                             "interpret", "perturb"))
+def zo_matmul(x, w, seed, mu, *, bm: int = 128, bn: int = 128,
+              bk: int = 128, interpret: bool = True, perturb: bool = True):
+    """y = x @ (W + mu*U(seed)); x: (M, K), w: (K, N).
+
+    ``interpret=True`` executes on CPU for validation; on TPU pass
+    ``interpret=False``.  ``perturb=False`` degenerates to a plain
+    blocked matmul (the clean forward of the two-point estimator).
+    """
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (
+        "pad inputs to tile multiples", (M, K, N), (bm, bk, bn))
+    nm, nn, nk = M // bm, N // bn, K // bk
+    seed_arr = jnp.asarray([seed], jnp.int32)
+    mu_arr = jnp.asarray([mu], jnp.float32)
+    kernel = functools.partial(_zo_matmul_kernel, nk=nk,
+                               gen_noise=perturb)
+    return pl.pallas_call(
+        kernel,
+        grid=(nm, nn, nk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((bm, bk), lambda mi, ni, ki: (mi, ki)),
+            pl.BlockSpec((bk, bn), lambda mi, ni, ki: (ki, ni)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda mi, ni, ki: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(seed_arr, mu_arr, x, w)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bk", "interpret"))
+def zo_noise(w_shape_like, seed, *, bn: int = 128, bk: int = 128,
+             interpret: bool = True):
+    """Materialize U(seed) with the kernel's exact per-tile PRNG stream
+    (test/debug only — production never materializes U)."""
+    K, N = w_shape_like.shape
+    bn, bk = min(bn, N), min(bk, K)
+    assert N % bn == 0 and K % bk == 0
+    nn, nk = N // bn, K // bk
+    seed_arr = jnp.asarray([seed], jnp.int32)
+    return pl.pallas_call(
+        functools.partial(_noise_kernel, nk=nk),
+        grid=(nn, nk),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM)],
+        out_specs=pl.BlockSpec((bk, bn), lambda ni, ki: (ki, ni)),
+        out_shape=jax.ShapeDtypeStruct((K, N), jnp.float32),
+        interpret=interpret,
+    )(seed_arr)

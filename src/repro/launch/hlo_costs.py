@@ -1,0 +1,268 @@
+"""Scan-aware HLO cost analysis.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE, so any model
+lowered with ``lax.scan`` over layers (or kv-blocks, or time steps) is
+undercounted by the trip count.  This module parses the post-optimization
+HLO text, builds the computation call graph, infers while-loop trip
+counts from their condition computations, and returns totals with every
+computation multiplied by its execution count:
+
+* dot FLOPs        (2 * prod(out) * prod(contracting dims))
+* HBM traffic      (operand + output bytes of top-level instructions —
+                    fusion internals stay on-chip, so this approximates
+                    post-fusion HBM movement)
+* collective bytes (ring-model per-chip traffic, by op kind)
+
+Validated against ``cost_analysis()`` on scan-free lowerings
+(tests/test_roofline.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+    "token": 0, "opaque": 0,
+}
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_INSTR = re.compile(
+    r"^\s*(ROOT\s+)?%?(?P<name>[\w\.\-]+)\s*=\s*(?P<shape>\([^()]*\)|"
+    r"[\w]+\[[0-9,]*\](?:\{[^}]*\})?)\s*(?P<op>[\w\-]+)\((?P<args>.*)$")
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_BATCH = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+_CALLS = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
+_WHILE = re.compile(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_CONST = re.compile(r"[su]32\[\]\s+constant\((\d+)\)")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "copy-start", "copy-done", "after-all", "partition-id", "replica-id",
+    "iota", "while", "conditional", "call", "fusion", "custom-call",
+}
+
+
+def _shape_elems_bytes(text: str):
+    total_b = 0
+    total_e = 0
+    for dt, dims in _SHAPE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total_e += n
+        total_b += n * _DTYPE_BYTES[dt]
+    return total_e, total_b
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA.search(line)
+    if m:
+        return max(int(m.group(2)), 2)
+    m = _GROUPS.search(line)
+    if m:
+        return max(len([x for x in m.group(1).split(",") if x.strip()]), 2)
+    return 2
+
+
+@dataclasses.dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: dict = dataclasses.field(default_factory=dict)
+    # (callee, multiplier) edges
+    calls: list = dataclasses.field(default_factory=list)
+    # deferred fusion boundary byte records:
+    # (callee, [operand bytes], out_bytes, is_dus)
+    fusion_bytes: list = dataclasses.field(default_factory=list)
+    has_slice: bool = False
+
+
+def parse_hlo(text: str):
+    comps: dict[str, CompCost] = {}
+    shapes: dict[str, dict[str, str]] = {}       # comp -> name -> shape
+    cond_consts: dict[str, int] = {}
+    cur = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None or not line.startswith(" "):
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                cur = m.group(2)
+                comps[cur] = CompCost()
+                shapes[cur] = {}
+            continue
+        m = _INSTR.match(line)
+        if not m or cur is None:
+            continue
+        name, shape_txt, op = m.group("name"), m.group("shape"), m.group("op")
+        shapes[cur][name] = shape_txt
+        cc = comps[cur]
+        mc = _CONST.search(line)
+        if mc:
+            cond_consts[cur] = max(cond_consts.get(cur, 0),
+                                   int(mc.group(1)))
+        if op in ("dynamic-slice", "slice", "gather"):
+            cc.has_slice = True
+        if op == "dot":
+            out_e, _ = _shape_elems_bytes(shape_txt)
+            # lhs operand name
+            args = m.group("args")
+            lhs_name = args.split(",")[0].strip().lstrip("%")
+            lhs_shape = shapes[cur].get(lhs_name, "")
+            dims_m = _CONTRACT.search(line)
+            k = 1
+            if dims_m and lhs_shape:
+                sm = _SHAPE.search(lhs_shape)
+                if sm:
+                    lhs_dims = [int(d) for d in sm.group(2).split(",")
+                                if d.strip()]
+                    for ci in dims_m.group(1).split(","):
+                        if ci.strip():
+                            k *= lhs_dims[int(ci)]
+            cc.flops += 2.0 * out_e * k
+        if op in COLLECTIVES or op.replace("-start", "") in COLLECTIVES:
+            kind = op.replace("-start", "")
+            _, out_b = _shape_elems_bytes(shape_txt)
+            g = _group_size(line)
+            if kind == "all-reduce":
+                t = 2.0 * out_b * (g - 1) / g
+            elif kind == "all-gather":
+                t = out_b * (g - 1) / g
+            elif kind == "reduce-scatter":
+                t = out_b * (g - 1)
+            elif kind == "all-to-all":
+                t = out_b * (g - 1) / g
+            else:
+                t = float(out_b)
+            cc.coll[kind] = cc.coll.get(kind, 0.0) + t
+        # call edges
+        if op == "while":
+            wm = _WHILE.search(line)
+            if wm:
+                cc.calls.append((wm.group(2), ("while", wm.group(1))))
+        elif op in ("fusion", "call", "custom-call", "sort", "reduce",
+                    "map", "scatter", "select-and-scatter", "reduce-window",
+                    "all-reduce", "all-reduce-start"):
+            for callee in _CALLS.findall(line):
+                # fusion internals: count flops/collectives, NOT bytes
+                # (bytes are taken at the fusion boundary — internals
+                # stay in registers/VMEM)
+                cc.calls.append((callee, ("fusion", 1) if op == "fusion"
+                                 else 1))
+        elif op == "conditional":
+            for callee in re.findall(r"branch_computations=\{([^}]*)\}",
+                                     line):
+                for c in callee.split(","):
+                    cc.calls.append((c.strip().lstrip("%"), 1))
+        # HBM traffic approximation
+        if op not in _SKIP_BYTES_OPS or op == "fusion":
+            _, out_b = _shape_elems_bytes(shape_txt)
+            arg_names = []
+            for tok in m.group("args").split(","):
+                tok = tok.strip().rstrip("), ").lstrip("%")
+                nm = tok.split(" ")[0].strip("%() ")
+                if nm in shapes[cur]:
+                    arg_names.append(nm)
+            if op == "fusion":
+                callee = (_CALLS.findall(line) or [None])[0]
+                is_dus = ("dynamic_update_slice" in line
+                          or "dynamic-update-slice" in line)
+                ops_b = []
+                for nm in arg_names:
+                    _, b = _shape_elems_bytes(shapes[cur][nm])
+                    ops_b.append(b)
+                cc.fusion_bytes.append((callee, ops_b, out_b, is_dus))
+            elif op in ("dynamic-slice", "gather", "slice"):
+                cc.bytes += 2.0 * out_b          # read slice + write out
+            elif op == "dynamic-update-slice":
+                upd_b = 0
+                if len(arg_names) >= 2:
+                    _, upd_b = _shape_elems_bytes(
+                        shapes[cur][arg_names[1]])
+                cc.bytes += 2.0 * upd_b          # in-place slice update
+            elif op == "scatter":
+                upd_b = 0
+                if len(arg_names) >= 3:
+                    _, upd_b = _shape_elems_bytes(
+                        shapes[cur][arg_names[2]])
+                cc.bytes += 2.0 * upd_b
+            elif op not in ("while", "conditional", "call"):
+                in_b = 0
+                for nm in arg_names:
+                    _, b = _shape_elems_bytes(shapes[cur][nm])
+                    in_b += b
+                cc.bytes += out_b + in_b
+    # resolve deferred fusion boundary bytes now that every callee's
+    # has_slice flag is known
+    for cc in comps.values():
+        for callee, ops_b, out_b, is_dus in cc.fusion_bytes:
+            if is_dus:
+                small = sum(b for b in ops_b if b < out_b)
+                cc.bytes += 2.0 * max(small, out_b // 64)
+                continue
+            slicey = callee in comps and comps[callee].has_slice
+            total = out_b
+            for b in ops_b:
+                if slicey and b > 4 * max(out_b, 1):
+                    total += out_b          # sliced read of a big buffer
+                else:
+                    total += b
+            cc.bytes += total
+    return comps, cond_consts
+
+
+def total_costs(text: str):
+    comps, cond_consts = parse_hlo(text)
+    memo: dict[str, tuple] = {}
+
+    def resolve(name: str, depth=0):
+        if name in memo:
+            return memo[name]
+        if name not in comps or depth > 50:
+            return 0.0, 0.0, {}
+        cc = comps[name]
+        f, b = cc.flops, cc.bytes
+        coll = dict(cc.coll)
+        for callee, mult in cc.calls:
+            via_fusion = False
+            if isinstance(mult, tuple) and mult[0] == "while":
+                trips = max(cond_consts.get(mult[1], 1), 1)
+            elif isinstance(mult, tuple) and mult[0] == "fusion":
+                trips = mult[1]
+                via_fusion = True
+            else:
+                trips = mult
+            cf, cb, ccoll = resolve(callee, depth + 1)
+            f += cf * trips
+            if not via_fusion:
+                b += cb * trips
+            for k, v in ccoll.items():
+                coll[k] = coll.get(k, 0.0) + v * trips
+        memo[name] = (f, b, coll)
+        return memo[name]
+
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                entry = m.group(2)
+            break
+    if entry is None:
+        # fall back: the computation with the most calls
+        entry = max(comps, key=lambda c: len(comps[c].calls), default=None)
+    f, b, coll = resolve(entry) if entry else (0.0, 0.0, {})
+    return {"flops": f, "bytes": b, "collectives": coll,
+            "collective_bytes": sum(coll.values())}

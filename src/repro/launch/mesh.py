@@ -1,0 +1,23 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing never touches jax
+device state.  Single pod: 16x16 = 256 chips ("data","model").
+Multi-pod: 2x16x16 = 512 chips ("pod","data","model").
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model_parallel: int = 1):
+    """Elastic: build a mesh from whatever devices are visible."""
+    n = jax.device_count()
+    mp = model_parallel if n % model_parallel == 0 else 1
+    return jax.make_mesh((n // mp, mp), ("data", "model"))

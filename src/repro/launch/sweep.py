@@ -1,0 +1,72 @@
+"""Run the full (arch x shape x mesh) dry-run sweep, one subprocess per
+cell (fresh XLA state), resumable via the output jsonl."""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+
+def done_cells(out):
+    seen = set()
+    if os.path.exists(out):
+        with open(out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                except json.JSONDecodeError:
+                    continue
+                if r.get("status") in ("ok", "skipped"):
+                    seen.add((r["arch"], r["shape"], r["mesh"],
+                              r.get("train_method", "heron")))
+    return seen
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="experiments/dryrun_baseline.jsonl")
+    ap.add_argument("--method", default="heron")
+    ap.add_argument("--timeout", type=int, default=3600)
+    ap.add_argument("--meshes", default="single,multi")
+    args = ap.parse_args()
+    from repro.configs.registry import ARCH_IDS
+    from repro.configs.base import SHAPES
+    seen = done_cells(args.out)
+    meshes = args.meshes.split(",")
+    cells = [(a, s, m) for a in ARCH_IDS for s in SHAPES for m in meshes]
+    for i, (arch, shape, mesh) in enumerate(cells):
+        mesh_name = "2x16x16" if mesh == "multi" else "16x16"
+        if (arch, shape, mesh_name, args.method) in seen or \
+           (arch, shape, mesh_name, "heron") in seen:
+            continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape, "--method", args.method,
+               "--out", args.out]
+        if mesh == "multi":
+            cmd.append("--multi-pod")
+        t0 = time.time()
+        print(f"[sweep {i+1}/{len(cells)}] {arch} {shape} {mesh_name}",
+              flush=True)
+        try:
+            r = subprocess.run(cmd, timeout=args.timeout,
+                               capture_output=True, text=True)
+            tail = (r.stdout.strip().splitlines() or [""])[-1][:160]
+            print(f"   -> rc={r.returncode} {time.time()-t0:.0f}s {tail}",
+                  flush=True)
+            if r.returncode != 0:
+                err = (r.stdout + r.stderr)[-500:]
+                print(f"   STDERR: {err}", flush=True)
+        except subprocess.TimeoutExpired:
+            print(f"   -> TIMEOUT after {args.timeout}s", flush=True)
+            with open(args.out, "a") as f:
+                f.write(json.dumps({
+                    "arch": arch, "shape": shape, "mesh": mesh_name,
+                    "status": "error", "error": "compile timeout"}) + "\n")
+    print("[sweep] done", flush=True)
+
+
+if __name__ == "__main__":
+    main()

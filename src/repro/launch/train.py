@@ -1,0 +1,112 @@
+"""Datacenter training driver: elastic mesh, checkpoint/restart, the
+hybrid HERON step (or any baseline method) on real devices.
+
+Example (CPU, reduced config):
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --smoke \
+      --steps 20 --batch 8 --seq 64 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import checkpoint as CKPT
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.core import protocols as P
+from repro.core import zo as Z
+from repro.data.pipeline import place_batch
+from repro.data.synthetic import BigramLM
+from repro.distributed.sharding import AxisRules, DATA_AXES
+from repro.launch.mesh import make_local_mesh
+from repro.models import transformer as T
+from repro.optim.optimizers import make_optimizer
+from repro.optim.schedules import warmup_cosine
+
+
+def build_batch(cfg, ds, key, batch, seq):
+    b = ds.batch(key, batch)
+    if cfg.enc_dec:
+        emb = jax.random.normal(key, (batch, seq - 1, cfg.d_model),
+                                jnp.float32).astype(cfg.jnp_compute_dtype())
+        return {"inputs": emb, "aux_labels": b["labels"],
+                "dec_tokens": b["inputs"], "labels": b["labels"]}
+    if cfg.frontend == "vision":
+        emb = jax.random.normal(key, (batch, seq - 1, cfg.d_model),
+                                jnp.float32).astype(cfg.jnp_compute_dtype())
+        pos = jnp.broadcast_to(jnp.arange(seq - 1)[None, None],
+                               (3, batch, seq - 1)).astype(jnp.int32)
+        return {"inputs": emb, "positions": pos, "labels": b["labels"]}
+    if cfg.frontend == "audio":
+        emb = jax.random.normal(key, (batch, seq - 1, cfg.d_model),
+                                jnp.float32).astype(cfg.jnp_compute_dtype())
+        return {"inputs": emb, "labels": b["labels"]}
+    return b
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b", choices=list(ARCH_IDS))
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--method", default="heron", choices=list(P.METHODS))
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr-client", type=float, default=1e-3)
+    ap.add_argument("--lr-server", type=float, default=1e-3)
+    ap.add_argument("--zo-mu", type=float, default=1e-3)
+    ap.add_argument("--zo-pairs", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    mesh = make_local_mesh(args.model_parallel) if jax.device_count() > 1 \
+        else None
+    rules = AxisRules(mesh=mesh, enable_fsdp=False)
+    api = P.lm_api(cfg, rules)
+    c_name = "zo_sgd" if args.method == "heron" else "adamw"
+    copt = make_optimizer(
+        c_name, warmup_cosine(args.lr_client, 5, args.steps))
+    sopt = make_optimizer(
+        cfg.optimizer if cfg.optimizer != "adafactor" or not args.smoke
+        else "adamw",
+        warmup_cosine(args.lr_server, 5, args.steps))
+
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    state = P.init_train_state(jax.random.PRNGKey(1), params, copt, sopt)
+    start = 0
+    if args.ckpt_dir and CKPT.latest_step(args.ckpt_dir) is not None:
+        state, start = CKPT.restore(args.ckpt_dir, state)
+        print(f"[train] restored checkpoint at step {start}")
+    step_fn = jax.jit(P.make_train_step(
+        api, args.method, Z.ZOConfig(mu=args.zo_mu, n_pairs=args.zo_pairs),
+        copt, sopt), donate_argnums=0)
+
+    ds = BigramLM(vocab=cfg.vocab, seq_len=args.seq, seed=0)
+    key = jax.random.PRNGKey(7)
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = build_batch(cfg, ds, jax.random.fold_in(key, step),
+                            args.batch, args.seq)
+        batch = place_batch(batch, rules)
+        state, metrics = step_fn(state, batch)
+        if step % 5 == 0 or step == args.steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            print(f"[train] step {step:4d} loss={m.get('loss', 0):.4f} "
+                  f"client_loss={m.get('client_loss', 0):.4f} "
+                  f"({time.time()-t0:.1f}s)")
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            CKPT.save(args.ckpt_dir, step + 1, state)
+    if args.ckpt_dir:
+        CKPT.save(args.ckpt_dir, args.steps, state)
+        print(f"[train] final checkpoint at {args.ckpt_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

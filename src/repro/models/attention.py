@@ -1,0 +1,323 @@
+"""GQA attention: naive, blocked (flash-style, online softmax in XLA),
+and decode-with-cache paths.  Supports local windows, logit soft-capping,
+RoPE / M-RoPE, causal static block skipping (perf opt).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import AxisRules, constrain
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+NEG_INF = -2.0e38
+
+
+def init_attention(pb: L.ParamBuilder, path: str, cfg: ModelConfig):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    return {
+        "wq": L.init_dense(pb, f"{path}.wq", d, cfg.n_heads * hd,
+                           "d_model", "heads", cfg.qkv_bias),
+        "wk": L.init_dense(pb, f"{path}.wk", d, cfg.n_kv_heads * hd,
+                           "d_model", "kv_heads", cfg.qkv_bias),
+        "wv": L.init_dense(pb, f"{path}.wv", d, cfg.n_kv_heads * hd,
+                           "d_model", "kv_heads", cfg.qkv_bias),
+        "wo": L.init_dense(pb, f"{path}.wo", cfg.n_heads * hd, d,
+                           "heads", "d_model", False),
+    }
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(x.shape[:-1] + (n, hd))
+
+
+def _mask(q_pos, kv_pos, causal: bool, window: int):
+    # q_pos: (..., Sq), kv_pos: (..., Skv) -> bool (..., Sq, Skv)
+    m = jnp.ones(q_pos.shape + kv_pos.shape[-1:], bool)
+    d = q_pos[..., :, None] - kv_pos[..., None, :]
+    if causal:
+        m = m & (d >= 0)
+    if window > 0:
+        m = m & (d < window)
+    return m
+
+
+# ---------------------------------------------------------------------------
+# naive reference path
+# ---------------------------------------------------------------------------
+
+def naive_attention(q, k, v, *, causal=True, window=0, cap=None, scale=None,
+                    q_offset=0):
+    """q: (B,Sq,H,D)  k,v: (B,Skv,K,D).  Reference; materializes scores."""
+    B, Sq, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    scale = scale if scale is not None else D ** -0.5
+    qr = q.reshape(B, Sq, K, G, D)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qr.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    s = L.softcap(s, cap)
+    q_pos = jnp.arange(Sq) + q_offset
+    kv_pos = jnp.arange(k.shape[1])
+    m = _mask(q_pos, kv_pos, causal, window)
+    s = jnp.where(m[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# blocked flash-style path (pure XLA online softmax)
+# ---------------------------------------------------------------------------
+
+def _attend_block(q_blk, k_blk, v_blk, q_pos, kv_pos, carry, *,
+                  causal, window, cap, scale, p_dtype=jnp.float32):
+    """One (q_chunk x kv_chunk) tile of online-softmax attention.
+
+    q_blk: (B,cq,K,G,D); k_blk/v_blk: (B,ck,K,D); carry=(m,l,acc) with
+    m,l: (B,K,G,cq), acc: (B,cq,K,G,D).
+    """
+    m_prev, l_prev, acc = carry
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q_blk.astype(jnp.float32),
+                   k_blk.astype(jnp.float32)) * scale
+    s = L.softcap(s, cap)
+    msk = _mask(q_pos, kv_pos, causal, window)          # (cq, ck)
+    s = jnp.where(msk[None, None, None], s, NEG_INF)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))    # (B,K,G,cq)
+    # guard: fully-masked rows keep m at NEG_INF -> exp underflows to 0
+    p = jnp.exp(s - m_new[..., None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+    # the p matrix is the single biggest HBM tensor in the XLA attention
+    # path; feeding p@v in bf16 halves its traffic (softmax state m/l
+    # stays f32; the accumulator stays f32)
+    pv = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(p_dtype),
+                    v_blk.astype(p_dtype)).astype(jnp.float32)
+    acc = acc * jnp.moveaxis(alpha, 3, 1)[..., None] + pv
+    return m_new, l_new, acc
+
+
+def blocked_attention(q, k, v, *, causal=True, window=0, cap=None,
+                      scale=None, q_chunk=1024, kv_chunk=1024,
+                      causal_skip=False, q_offset=0, p_dtype=jnp.float32):
+    """Flash-attention-style blocked attention in pure XLA.
+
+    Never materializes the (Sq, Skv) score matrix.  With
+    ``causal_skip=True`` the q-block loop is unrolled in Python and each
+    q block only scans the kv blocks that are not fully masked (static
+    bounds) — halves FLOPs for causal, and makes local attention O(S·W).
+    """
+    B, Sq, H, D = q.shape
+    Skv, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = scale if scale is not None else D ** -0.5
+    cq = min(q_chunk, Sq)
+    ck = min(kv_chunk, Skv)
+    nq = -(-Sq // cq)
+    nk = -(-Skv // ck)
+    # pad to full tiles
+    Sq_p, Skv_p = nq * cq, nk * ck
+    qp = jnp.pad(q, ((0, 0), (0, Sq_p - Sq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, Skv_p - Skv), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Skv_p - Skv), (0, 0), (0, 0)))
+    qp = qp.reshape(B, nq, cq, K, G, D)
+    kp = kp.reshape(B, nk, ck, K, D)
+    vp = vp.reshape(B, nk, ck, K, D)
+    kv_pos_all = jnp.arange(Skv_p).reshape(nk, ck)
+    # padded kv positions must never be attended: mark them far-future
+    kv_valid = kv_pos_all < Skv
+
+    def run_q_block(qi: int, kv_lo: int, kv_hi: int):
+        q_blk = qp[:, qi]
+        q_pos = jnp.arange(cq) + qi * cq + q_offset
+
+        def step(carry, idx):
+            k_blk = jnp.take(kp, idx, axis=1)
+            v_blk = jnp.take(vp, idx, axis=1)
+            kv_pos = jnp.where(kv_valid[idx], kv_pos_all[idx],
+                               jnp.iinfo(jnp.int32).max // 2)
+            carry = _attend_block(q_blk, k_blk, v_blk, q_pos, kv_pos, carry,
+                                  causal=causal, window=window, cap=cap,
+                                  scale=scale, p_dtype=p_dtype)
+            return carry, None
+
+        m0 = jnp.full((B, K, G, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, K, G, cq), jnp.float32)
+        a0 = jnp.zeros((B, cq, K, G, D), jnp.float32)
+        idxs = jnp.arange(kv_lo, kv_hi)
+        (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), idxs)
+        l = jnp.moveaxis(l, 3, 1)[..., None]            # (B,cq,K,G,1)
+        return acc / jnp.maximum(l, 1e-30)
+
+    if causal_skip:
+        outs = []
+        for qi in range(nq):
+            q_hi_pos = (qi + 1) * cq + q_offset          # exclusive
+            q_lo_pos = qi * cq + q_offset
+            hi = min(nk, -(-q_hi_pos // ck)) if causal else nk
+            lo = 0
+            if window > 0:
+                lo = max(0, (q_lo_pos - window + 1) // ck)
+            outs.append(run_q_block(qi, lo, max(hi, lo + 1)))
+        out = jnp.stack(outs, axis=1)                    # (B,nq,cq,K,G,D)
+    else:
+        # scan over q blocks with full kv range
+        def q_step(_, qi):
+            q_blk = jnp.take(qp, qi, axis=1)
+            q_pos = jnp.arange(cq) + qi * cq + q_offset
+
+            def step(carry, idx):
+                k_blk = jnp.take(kp, idx, axis=1)
+                v_blk = jnp.take(vp, idx, axis=1)
+                kv_pos = jnp.where(kv_valid[idx], kv_pos_all[idx],
+                                   jnp.iinfo(jnp.int32).max // 2)
+                return _attend_block(q_blk, k_blk, v_blk, q_pos, kv_pos,
+                                     carry, causal=causal, window=window,
+                                     cap=cap, scale=scale,
+                                     p_dtype=p_dtype), None
+
+            m0 = jnp.full((B, K, G, cq), NEG_INF, jnp.float32)
+            l0 = jnp.zeros((B, K, G, cq), jnp.float32)
+            a0 = jnp.zeros((B, cq, K, G, D), jnp.float32)
+            (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                          jnp.arange(nk))
+            l = jnp.moveaxis(l, 3, 1)[..., None]
+            return None, acc / jnp.maximum(l, 1e-30)
+
+        _, out = jax.lax.scan(q_step, None, jnp.arange(nq))
+        out = jnp.moveaxis(out, 0, 1)                    # (B,nq,cq,K,G,D)
+
+    out = out.reshape(B, Sq_p, H, D)[:, :Sq]
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode path (single new token against a cache)
+# ---------------------------------------------------------------------------
+
+def decode_attention(q, k_cache, v_cache, valid_len, *, window=0, cap=None,
+                     scale=None):
+    """q: (B,1,H,D); caches: (B,S,K,D); valid_len: scalar or (B,) ints."""
+    B, _, H, D = q.shape
+    S, K = k_cache.shape[1], k_cache.shape[2]
+    G = H // K
+    scale = scale if scale is not None else D ** -0.5
+    qr = q.reshape(B, K, G, D)
+    s = jnp.einsum("bkgd,bskd->bkgs", qr.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    s = L.softcap(s, cap)
+    pos = jnp.arange(S)
+    vl = jnp.asarray(valid_len)
+    vl = vl if vl.ndim else vl[None]
+    m = pos[None] < vl[:, None]                          # (B,S)
+    if window > 0:
+        m = m & (pos[None] >= (vl[:, None] - window))
+    s = jnp.where(m[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# full attention layer (proj + rope + impl dispatch + out proj)
+# ---------------------------------------------------------------------------
+
+def attention_layer(params, x, cfg: ModelConfig, rules: AxisRules, *,
+                    positions=None, local: bool = False, cache=None,
+                    cross_kv=None, decode: bool = False):
+    """Returns (out, new_cache).  ``cache`` (decode mode) is a dict
+    {k, v, pos}; cross_kv provides precomputed (k, v) for cross-attention.
+    """
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    cdt = cfg.jnp_compute_dtype()
+    window = cfg.window if local else 0
+    q = _split_heads(L.dense(params["wq"], x, cdt), cfg.n_heads, hd)
+    if cross_kv is None:
+        k = _split_heads(L.dense(params["wk"], x, cdt), cfg.n_kv_heads, hd)
+        v = _split_heads(L.dense(params["wv"], x, cdt), cfg.n_kv_heads, hd)
+    else:
+        k, v = cross_kv
+    if positions is None:
+        base = cache["pos"] if (cache is not None and decode) else 0
+        positions = base + jnp.arange(S)[None, :] * jnp.ones((B, 1), jnp.int32)
+    if cfg.rope_kind == "rope" and cross_kv is None:
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.rope_kind == "mrope" and cross_kv is None:
+        pos3 = positions if positions.ndim == 3 else jnp.broadcast_to(
+            positions, (3,) + positions.shape)
+        q = L.apply_mrope(q, pos3, cfg.mrope_sections, cfg.rope_theta)
+        k = L.apply_mrope(k, pos3, cfg.mrope_sections, cfg.rope_theta)
+    if cfg.seq_sharding and not decode:
+        # sequence-parallel attention: q (and the online-softmax state)
+        # sharded on seq over the model axis; k/v replicated (small under
+        # GQA).  Removes head-replication waste and the involuntary
+        # score resharding GSPMD otherwise inserts (EXPERIMENTS.md §Perf).
+        q = constrain(q, rules, ("batch", "seq_model", None, None))
+        k = constrain(k, rules, ("batch", None, None, None))
+        v = constrain(v, rules, ("batch", None, None, None))
+    else:
+        q = constrain(q, rules, ("batch", None, "heads", None))
+    new_cache = None
+    if decode:
+        assert cache is not None and S == 1
+        pos = cache["pos"]
+        if window > 0:   # ring buffer of size window
+            slot = pos % cache["k"].shape[1]
+        else:
+            slot = pos
+        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(
+            cache["k"].dtype), slot, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(
+            cache["v"].dtype), slot, axis=1)
+        new_cache = {"k": kc, "v": vc, "pos": pos + 1}
+        if window > 0:
+            o = decode_attention(q, kc, vc,
+                                 jnp.minimum(pos + 1, kc.shape[1]),
+                                 window=0, cap=cfg.attn_softcap,
+                                 scale=cfg.attn_scale)
+        else:
+            o = decode_attention(q, kc, vc, pos + 1, window=0,
+                                 cap=cfg.attn_softcap, scale=cfg.attn_scale)
+    elif cross_kv is not None:
+        o = naive_attention(q, k, v, causal=False, window=0,
+                            cap=cfg.attn_softcap, scale=cfg.attn_scale) \
+            if cfg.attn_impl == "naive" else \
+            blocked_attention(q, k, v, causal=False, window=0,
+                              cap=cfg.attn_softcap, scale=cfg.attn_scale,
+                              q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                              causal_skip=False)
+    else:
+        causal = True
+        if cfg.attn_impl == "naive":
+            o = naive_attention(q, k, v, causal=causal, window=window,
+                                cap=cfg.attn_softcap, scale=cfg.attn_scale)
+        else:
+            # seq-sharded: one q block (the whole sharded seq), kv scan
+            qc = q.shape[1] if cfg.seq_sharding else cfg.q_chunk
+            o = blocked_attention(q, k, v, causal=causal, window=window,
+                                  cap=cfg.attn_softcap, scale=cfg.attn_scale,
+                                  q_chunk=qc, kv_chunk=cfg.kv_chunk,
+                                  causal_skip=(cfg.causal_skip
+                                               and not cfg.seq_sharding),
+                                  p_dtype=jnp.dtype(cfg.attn_p_dtype))
+    o = o.reshape(B, S, cfg.n_heads * hd)
+    out = L.dense(params["wo"], o, cdt)
+    return constrain(out, rules, ("batch", None, None)), new_cache
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, seq: int, *, local: bool):
+    size = min(seq, cfg.window) if local and cfg.window > 0 else seq
+    hd = cfg.resolved_head_dim
+    dt = cfg.jnp_compute_dtype()
+    return {
+        "k": jnp.zeros((batch, size, cfg.n_kv_heads, hd), dt),
+        "v": jnp.zeros((batch, size, cfg.n_kv_heads, hd), dt),
+        "pos": jnp.zeros((), jnp.int32),
+    }

@@ -1,0 +1,150 @@
+"""ResNet-style CNN for the paper's vision experiments (ResNet-18 on
+CIFAR-10).  Functional JAX; BatchNorm is replaced by GroupNorm to keep
+the model state-free under vmap'd federated simulation (noted deviation
+in DESIGN.md — the split point "after the second norm layer" is kept).
+
+Split per the paper: the client holds the stem (conv-norm-relu) and the
+first residual block(s) up to ``client_blocks``; the aux head is a single
+pooled fully-connected layer; the server holds the rest.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamBuilder
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    widths: tuple[int, ...] = (64, 128, 256, 512)
+    blocks_per_stage: int = 2
+    classes: int = 10
+    client_blocks: int = 1       # residual blocks on the client
+    groups: int = 8
+    param_dtype: str = "float32"
+
+
+def _conv_init(pb: ParamBuilder, path, kh, kw, cin, cout):
+    return pb.param(path, (kh, kw, cin, cout),
+                    (None, None, None, "d_ff"), "normal",
+                    scale=(2.0 / (kh * kw * cin)) ** 0.5)
+
+
+def _gn_init(pb: ParamBuilder, path, c):
+    return {"scale": pb.param(f"{path}.s", (c,), (None,), "ones"),
+            "bias": pb.param(f"{path}.b", (c,), (None,), "zeros")}
+
+
+def conv(w, x, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w.astype(x.dtype), (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def groupnorm(p, x, groups=8, eps=1e-5):
+    B, H, W, C = x.shape
+    g = min(groups, C)
+    xg = x.reshape(B, H, W, g, C // g).astype(jnp.float32)
+    mu = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    xn = ((xg - mu) * jax.lax.rsqrt(var + eps)).reshape(B, H, W, C)
+    return (xn * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+def _block_init(pb, path, cin, cout, stride):
+    p = {"c1": _conv_init(pb, f"{path}.c1", 3, 3, cin, cout),
+         "n1": _gn_init(pb, f"{path}.n1", cout),
+         "c2": _conv_init(pb, f"{path}.c2", 3, 3, cout, cout),
+         "n2": _gn_init(pb, f"{path}.n2", cout)}
+    if stride != 1 or cin != cout:
+        p["proj"] = _conv_init(pb, f"{path}.proj", 1, 1, cin, cout)
+    return p
+
+
+def _block_apply(p, x, stride, groups):
+    h = jax.nn.relu(groupnorm(p["n1"], conv(p["c1"], x, stride), groups))
+    h = groupnorm(p["n2"], conv(p["c2"], h), groups)
+    sc = conv(p["proj"], x, stride) if "proj" in p else x
+    return jax.nn.relu(h + sc)
+
+
+def _stage_plan(cfg: CNNConfig):
+    """[(stage, block_idx, cin, cout, stride)] flat block list."""
+    plan = []
+    cin = cfg.widths[0]
+    for si, w in enumerate(cfg.widths):
+        for bi in range(cfg.blocks_per_stage):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            plan.append((si, bi, cin, w, stride))
+            cin = w
+    return plan
+
+
+def init_cnn(rng, cfg: CNNConfig, mode: str = "init"):
+    pb = ParamBuilder(rng, mode, jnp.dtype(cfg.param_dtype))
+    plan = _stage_plan(cfg)
+    stem = {"conv": _conv_init(pb, "stem.conv", 3, 3, 3, cfg.widths[0]),
+            "norm": _gn_init(pb, "stem.norm", cfg.widths[0])}
+    blocks = [_block_init(pb, f"block{idx}", cin, cout, stride)
+              for idx, (_, _, cin, cout, stride) in enumerate(plan)]
+    cb = cfg.client_blocks
+    client = {
+        "stem": stem,
+        "blocks": blocks[:cb],
+        "aux": {"fc": {"w": pb.param("aux.fc.w",
+                                     (plan[cb - 1][3] if cb else
+                                      cfg.widths[0], cfg.classes),
+                                     (None, None), "normal"),
+                       "b": pb.param("aux.fc.b", (cfg.classes,), (None,),
+                                     "zeros")}},
+    }
+    server = {
+        "blocks": blocks[cb:],
+        "fc": {"w": pb.param("server.fc.w", (cfg.widths[-1], cfg.classes),
+                             (None, None), "normal"),
+               "b": pb.param("server.fc.b", (cfg.classes,), (None,),
+                             "zeros")},
+    }
+    return {"client": client, "server": server}
+
+
+def client_forward(client, x, cfg: CNNConfig):
+    """x: (B, H, W, 3) -> smashed feature map."""
+    h = jax.nn.relu(groupnorm(client["stem"]["norm"],
+                              conv(client["stem"]["conv"], x), cfg.groups))
+    plan = _stage_plan(cfg)
+    for p, (_, _, _, _, stride) in zip(client["blocks"], plan):
+        h = _block_apply(p, h, stride, cfg.groups)
+    return h
+
+
+def aux_logits(client, smashed, cfg: CNNConfig):
+    pooled = jnp.mean(smashed, axis=(1, 2))
+    fc = client["aux"]["fc"]
+    return pooled.astype(jnp.float32) @ fc["w"].astype(jnp.float32) \
+        + fc["b"].astype(jnp.float32)
+
+
+def server_logits(server, smashed, cfg: CNNConfig):
+    plan = _stage_plan(cfg)[cfg.client_blocks:]
+    h = smashed
+    for p, (_, _, _, _, stride) in zip(server["blocks"], plan):
+        h = _block_apply(p, h, stride, cfg.groups)
+    pooled = jnp.mean(h, axis=(1, 2))
+    fc = server["fc"]
+    return pooled.astype(jnp.float32) @ fc["w"].astype(jnp.float32) \
+        + fc["b"].astype(jnp.float32)
+
+
+def xent(logits, labels):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None],
+                                         axis=-1))
+
+
+def accuracy(logits, labels):
+    return jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))

@@ -1,0 +1,103 @@
+"""Unified model configuration for all assigned architectures."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoECfg:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+    n_shared_experts: int = 0      # kimi-style shared expert
+    router_dtype: str = "float32"
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """One layer = mixer + ffn."""
+    mixer: str = "global_attn"     # global_attn|local_attn|rg_lru|mlstm|slstm
+    ffn: str = "dense"             # dense|moe|none
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    # --- layer pattern: repeated cyclically to n_layers ---
+    pattern: tuple[LayerSpec, ...] = (LayerSpec(),)
+    head_dim: int = 0              # 0 => d_model // n_heads
+    qkv_bias: bool = False
+    tie_embeddings: bool = True
+    norm: str = "rmsnorm"          # rmsnorm|layernorm
+    post_norm: bool = False        # gemma2-style post-block norms
+    activation: str = "silu"
+    gated_mlp: bool = True
+    rope_kind: str = "rope"        # rope|mrope|none
+    rope_theta: float = 10000.0
+    mrope_sections: tuple[int, ...] = ()
+    attn_softcap: float | None = None
+    final_softcap: float | None = None
+    attn_scale: float | None = None
+    window: int = 4096             # local-attention window
+    moe: MoECfg | None = None
+    # --- enc-dec (seamless-m4t) ---
+    enc_dec: bool = False
+    n_enc_layers: int = 0
+    # --- recurrent (xlstm / recurrentgemma) ---
+    lru_width: int = 0             # 0 => d_model
+    conv_width: int = 4
+    # --- modality frontend stub ---
+    frontend: str | None = None    # None|"audio"|"vision"
+    # --- SFL split ---
+    cut_layers: int = 2            # client-side depth (paper's cut layer)
+    aux_layers: int = 0            # extra transformer blocks in the aux head
+    # --- numerics ---
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    # --- performance knobs (hillclimbing surface) ---
+    attn_impl: str = "blocked"     # naive|blocked
+    q_chunk: int = 1024
+    kv_chunk: int = 1024
+    causal_skip: bool = False      # static causal block skipping (perf opt)
+    mlstm_chunk: int = 0           # 0 = sequential scan; >0 = chunkwise
+    seq_sharding: bool = False     # shard attention q/residual seq over model
+    attn_p_dtype: str = "float32"  # dtype of the softmax p matrix fed to p@v
+    remat: bool = True             # activation checkpointing on scan segments
+    remat_policy: str = "nothing"  # nothing|save_gathers (keep FSDP-gathered
+                                   # MoE weights across the bwd replay)
+    scan_layers: bool = True
+    optimizer: str = "adamw"       # adamw|adafactor|sgdm (server side)
+    # assigned-shape bookkeeping
+    family: str = "dense"          # dense|moe|audio|ssm|hybrid|vlm
+    subquadratic: bool = False     # eligible for long_500k
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def vocab_padded(self) -> int:
+        return ((self.vocab + 255) // 256) * 256
+
+    def jnp_param_dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def jnp_compute_dtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def layer_specs(self) -> tuple[LayerSpec, ...]:
+        reps = (self.n_layers + len(self.pattern) - 1) // len(self.pattern)
+        return (self.pattern * reps)[: self.n_layers]
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)

@@ -1,0 +1,250 @@
+"""Core layers: param building, norms, dense, embeddings, RoPE / M-RoPE,
+MLPs, conv1d.  Pure-functional; params are nested dicts of arrays.
+
+Every parameter is created through :class:`ParamBuilder`, which can run in
+three modes over the *same* code path, guaranteeing structural agreement:
+
+* ``init``  — materialize arrays (deterministic per-path fold_in of the rng)
+* ``axes``  — return the tuple of logical sharding axis names
+* ``shape`` — return jax.ShapeDtypeStruct (used by the dry-run; no alloc)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _path_seed(path: str) -> int:
+    # stable 31-bit hash of the param path
+    h = 2166136261
+    for ch in path.encode():
+        h = ((h ^ ch) * 16777619) & 0xFFFFFFFF
+    return h & 0x7FFFFFFF
+
+
+class ParamBuilder:
+    def __init__(self, rng: jax.Array | None, mode: str = "init",
+                 param_dtype=jnp.float32):
+        assert mode in ("init", "axes", "shape")
+        self.rng = rng
+        self.mode = mode
+        self.param_dtype = param_dtype
+
+    def param(self, path: str, shape: Sequence[int],
+              logical: Sequence[str | None], init: str = "normal",
+              scale: float | None = None):
+        shape = tuple(int(s) for s in shape)
+        assert len(shape) == len(logical), (path, shape, logical)
+        if self.mode == "axes":
+            return tuple(logical)
+        if self.mode == "shape":
+            return jax.ShapeDtypeStruct(shape, self.param_dtype)
+        key = jax.random.fold_in(self.rng, _path_seed(path))
+        if init == "zeros":
+            return jnp.zeros(shape, self.param_dtype)
+        if init == "ones":
+            return jnp.ones(shape, self.param_dtype)
+        if init == "normal":
+            if scale is None:
+                fan_in = shape[0] if len(shape) > 1 else max(shape[-1], 1)
+                scale = 1.0 / np.sqrt(max(fan_in, 1))
+            return (scale * jax.random.normal(key, shape)).astype(self.param_dtype)
+        if init == "lru_lambda":  # RG-LRU Lambda init: uniform in a stable band
+            u = jax.random.uniform(key, shape, minval=0.9, maxval=0.999)
+            # parametrized via softplus^{-1}(-log(a)/c) with c=8
+            a = -jnp.log(u) * 8.0
+            return jnp.log(jnp.expm1(a)).astype(self.param_dtype)
+        raise ValueError(init)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(pb: ParamBuilder, path: str, dim: int):
+    return {"scale": pb.param(f"{path}.scale", (dim,), ("d_model",), "zeros")}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    # gemma-style (1 + scale); "zeros" init => identity at init
+    return (y * (1.0 + params["scale"].astype(jnp.float32))).astype(dt)
+
+
+def init_layernorm(pb: ParamBuilder, path: str, dim: int):
+    return {
+        "scale": pb.param(f"{path}.scale", (dim,), ("d_model",), "ones"),
+        "bias": pb.param(f"{path}.bias", (dim,), ("d_model",), "zeros"),
+    }
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Dense / embedding
+# ---------------------------------------------------------------------------
+
+def init_dense(pb: ParamBuilder, path: str, d_in: int, d_out: int,
+               logical_in: str | None, logical_out: str | None,
+               bias: bool = False, scale: float | None = None):
+    p = {"w": pb.param(f"{path}.w", (d_in, d_out), (logical_in, logical_out),
+                       "normal", scale)}
+    if bias:
+        p["b"] = pb.param(f"{path}.b", (d_out,), (logical_out,), "zeros")
+    return p
+
+
+def dense(params, x, compute_dtype=None):
+    w = params["w"]
+    if compute_dtype is not None:
+        w = w.astype(compute_dtype)
+        x = x.astype(compute_dtype)
+    y = x @ w
+    if "lora_a" in params:  # low-rank adapter branch (pre-scaled at init)
+        y = y + (x @ params["lora_a"].astype(x.dtype)) \
+            @ params["lora_b"].astype(x.dtype)
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+def init_embedding(pb: ParamBuilder, path: str, vocab: int, dim: int):
+    return {"table": pb.param(f"{path}.table", (vocab, dim),
+                              ("vocab", "d_model"), "normal", 0.02)}
+
+
+def embed(params, ids, compute_dtype):
+    return params["table"].astype(compute_dtype)[ids]
+
+
+def unembed(params, x, compute_dtype):
+    return x.astype(compute_dtype) @ params["table"].astype(compute_dtype).T
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (RoPE and Qwen2-VL M-RoPE)
+# ---------------------------------------------------------------------------
+
+def _rope_angles(positions, head_dim: int, theta: float):
+    # positions: (..., S) float; returns (..., S, head_dim//2)
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    return positions[..., None].astype(jnp.float32) * freqs
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (B, S, H, D); positions: (B, S) int."""
+    d = x.shape[-1]
+    ang = _rope_angles(positions, d, theta)          # (B, S, d/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    sin = sin[:, :, None, :]
+    cos = cos[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, sections: Sequence[int], theta: float = 1e6):
+    """Qwen2-VL multimodal RoPE.
+
+    x: (B, S, H, D); positions3: (3, B, S) — temporal/height/width position
+    ids.  ``sections`` partitions the half-dim; section i rotates with
+    positions3[i].
+    """
+    d = x.shape[-1]
+    half = d // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    # build per-frequency position selector
+    sec_id = np.concatenate([np.full(s, i) for i, s in enumerate(sections)])
+    # (B, S, half): pick section-appropriate position per freq index
+    pos_bshalf = jnp.stack(
+        [positions3[i].astype(jnp.float32) for i in range(positions3.shape[0])],
+        axis=-1,
+    )  # (B, S, 3)
+    sel = jnp.asarray(sec_id, jnp.int32)                     # (half,)
+    pos_half = jnp.take_along_axis(
+        pos_bshalf, jnp.broadcast_to(sel, pos_bshalf.shape[:2] + (half,)), axis=-1
+    )                                                        # (B, S, half)
+    ang = pos_half * freqs                                    # (B, S, half)
+    sin, cos = jnp.sin(ang)[:, :, None, :], jnp.cos(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(pb: ParamBuilder, path: str, d_model: int, d_ff: int,
+             gated: bool = True, bias: bool = False):
+    p = {"up": init_dense(pb, f"{path}.up", d_model, d_ff, "d_model", "d_ff", bias),
+         "down": init_dense(pb, f"{path}.down", d_ff, d_model, "d_ff", "d_model", bias)}
+    if gated:
+        p["gate"] = init_dense(pb, f"{path}.gate", d_model, d_ff,
+                               "d_model", "d_ff", bias)
+    return p
+
+
+def mlp(params, x, activation: str = "silu", compute_dtype=None):
+    up = dense(params["up"], x, compute_dtype)
+    if "gate" in params:
+        g = dense(params["gate"], x, compute_dtype)
+        act = jax.nn.silu(g) if activation == "silu" else jax.nn.gelu(g)
+        h = act * up
+    else:
+        h = jax.nn.silu(up) if activation == "silu" else jax.nn.gelu(up)
+    return dense(params["down"], h, compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Depthwise causal conv1d (used by RG-LRU and xLSTM blocks)
+# ---------------------------------------------------------------------------
+
+def init_conv1d(pb: ParamBuilder, path: str, dim: int, width: int = 4):
+    return {
+        "w": pb.param(f"{path}.w", (width, dim), ("conv", "lru"), "normal", 0.1),
+        "b": pb.param(f"{path}.b", (dim,), ("lru",), "zeros"),
+    }
+
+
+def causal_conv1d(params, x, state=None):
+    """x: (B, S, C) depthwise causal conv.  If ``state`` is given
+    ((B, width-1, C) trailing context) runs in streaming mode and also
+    returns the new state."""
+    w = params["w"].astype(x.dtype)                     # (W, C)
+    width = w.shape[0]
+    if state is not None:
+        ctx = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    else:
+        ctx = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(width):
+        out = out + ctx[:, i:i + x.shape[1], :] * w[i]
+    out = out + params["b"].astype(x.dtype)
+    if state is not None:
+        new_state = ctx[:, -(width - 1):, :] if width > 1 else state
+        return out, new_state
+    return out
+
+
+def softcap(x, cap: float | None):
+    if cap is None or cap <= 0:
+        return x
+    return cap * jnp.tanh(x / cap)

@@ -1,0 +1,70 @@
+"""LoRA: low-rank adapters injected into dense layers.
+
+``add_lora`` walks a param tree and, for every dense-layer dict whose
+path matches ``predicate`` (default: attention + mlp projections), adds
+``lora_a`` (d_in, r) and ``lora_b`` (r, d_out) leaves.  ``layers.dense``
+picks them up automatically.  ``lora_pred`` is the trainable-path
+predicate used to restrict (ZO or FO) training to the adapters.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_TARGETS = ("wq", "wv", "wk", "wo", "up", "down", "gate")
+
+
+def add_lora(rng, params, rank: int = 8, alpha: float = 16.0,
+             targets=DEFAULT_TARGETS):
+    """Returns a new tree with lora_a/lora_b added to matching dense
+    dicts (a dict with a 2-D "w" whose parent key is in ``targets``)."""
+    counter = [0]
+
+    def walk(node, name):
+        if isinstance(node, dict):
+            if ("w" in node and hasattr(node["w"], "ndim")
+                    and node["w"].ndim in (2, 3) and name in targets
+                    and "lora_a" not in node):
+                # ndim==3: stacked scan params (layers, d_in, d_out)
+                *lead, d_in, d_out = node["w"].shape
+                counter[0] += 1
+                k = jax.random.fold_in(rng, counter[0])
+                a = jax.random.normal(k, (*lead, d_in, rank),
+                                      jnp.float32) \
+                    * (alpha / rank) / jnp.sqrt(d_in)
+                new = dict(node)
+                new["lora_a"] = a.astype(node["w"].dtype)
+                new["lora_b"] = jnp.zeros((*lead, rank, d_out),
+                                          node["w"].dtype)
+                return new
+            return {k: walk(v, k) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            t = type(node)
+            return t(walk(v, name) for v in node)
+        return node
+
+    return walk(params, "")
+
+
+def lora_pred(path: str) -> bool:
+    return "lora_a" in path or "lora_b" in path
+
+
+def merge_lora(params):
+    """Fold adapters into the base weights (serving path)."""
+    def walk(node):
+        if isinstance(node, dict):
+            if "lora_a" in node:
+                new = {k: v for k, v in node.items()
+                       if k not in ("lora_a", "lora_b")}
+                w = node["w"].astype(jnp.float32)
+                w = w + node["lora_a"].astype(jnp.float32) \
+                    @ node["lora_b"].astype(jnp.float32)
+                new["w"] = w.astype(node["w"].dtype)
+                return new
+            return {k: walk(v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v) for v in node)
+        return node
+
+    return walk(params)

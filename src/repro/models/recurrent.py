@@ -1,0 +1,370 @@
+"""Recurrent mixers: RG-LRU (RecurrentGemma), mLSTM & sLSTM (xLSTM).
+
+All three expose a train/prefill path over a full sequence and a
+single-step decode path against a carried state (the recurrent analogue
+of a KV cache — constant size, which is why these archs run the
+``long_500k`` shape).
+
+RG-LRU uses ``jax.lax.associative_scan`` on the linear recurrence
+h_t = a_t*h_{t-1} + b_t (log-depth, TPU-friendly); the LSTMs use
+``jax.lax.scan`` (their exponential-gating normalizers are cheap but the
+mLSTM matrix state is taken step-by-step; a chunkwise-parallel variant is
+the Pallas kernel's job).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import AxisRules, constrain
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+_LRU_C = 8.0
+
+
+# ===========================================================================
+# RG-LRU block (RecurrentGemma)
+# ===========================================================================
+
+def init_rg_lru(pb: L.ParamBuilder, path: str, cfg: ModelConfig):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    return {
+        "in_x": L.init_dense(pb, f"{path}.in_x", d, w, "d_model", "lru"),
+        "in_gate": L.init_dense(pb, f"{path}.in_gate", d, w, "d_model", "lru"),
+        "conv": L.init_conv1d(pb, f"{path}.conv", w, cfg.conv_width),
+        "w_i": L.init_dense(pb, f"{path}.w_i", w, w, "lru", None, bias=True),
+        "w_r": L.init_dense(pb, f"{path}.w_r", w, w, "lru", None, bias=True),
+        "lam": pb.param(f"{path}.lam", (w,), ("lru",), "lru_lambda"),
+        "out": L.init_dense(pb, f"{path}.out", w, d, "lru", "d_model"),
+    }
+
+
+def _rg_lru_coeffs(params, xc):
+    """xc: (B,S,W) conved input -> (a, b) of the linear recurrence."""
+    r = jax.nn.sigmoid(L.dense(params["w_r"], xc, jnp.float32))
+    i = jax.nn.sigmoid(L.dense(params["w_i"], xc, jnp.float32))
+    log_a = -_LRU_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) input normalization (Griffin eq. 4)
+    gate = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = gate * (i * xc.astype(jnp.float32))
+    return a, b
+
+
+def rg_lru_block(params, x, cfg: ModelConfig, rules: AxisRules,
+                 state=None, decode: bool = False):
+    """Returns (out, new_state).  state = {"h": (B,W), "conv": (B,cw-1,W)}."""
+    cdt = cfg.jnp_compute_dtype()
+    xb = L.dense(params["in_x"], x, cdt)
+    gateb = L.dense(params["in_gate"], x, cdt)
+    if decode:
+        xc, conv_state = L.causal_conv1d(params["conv"], xb, state["conv"])
+        a, b = _rg_lru_coeffs(params, xc)
+        h = a[:, 0] * state["h"].astype(jnp.float32) + b[:, 0]
+        new_state = {"h": h.astype(cdt), "conv": conv_state}
+        y = h[:, None, :]
+    else:
+        xc = L.causal_conv1d(params["conv"], xb)
+        a, b = _rg_lru_coeffs(params, xc)
+
+        def comb(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        _, y = jax.lax.associative_scan(comb, (a, b), axis=1)
+        new_state = {
+            "h": y[:, -1].astype(cdt),
+            "conv": jnp.concatenate(
+                [jnp.zeros_like(xb[:, :cfg.conv_width - 1]), xb],
+                axis=1)[:, -(cfg.conv_width - 1):],
+        }
+    y = y.astype(cdt) * jax.nn.gelu(gateb)
+    out = L.dense(params["out"], y, cdt)
+    return constrain(out, rules, ("batch", None, None)), new_state
+
+
+def init_rg_lru_state(cfg: ModelConfig, batch: int):
+    w = cfg.lru_width or cfg.d_model
+    cdt = cfg.jnp_compute_dtype()
+    return {"h": jnp.zeros((batch, w), cdt),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, w), cdt)}
+
+
+# ===========================================================================
+# mLSTM block (xLSTM) — matrix memory, exponential gating
+# ===========================================================================
+
+def init_mlstm(pb: L.ParamBuilder, path: str, cfg: ModelConfig):
+    d = cfg.d_model
+    H = cfg.n_heads
+    return {
+        "up": L.init_dense(pb, f"{path}.up", d, 2 * d, "d_model", "d_ff"),
+        "conv": L.init_conv1d(pb, f"{path}.conv", d, cfg.conv_width),
+        "wq": L.init_dense(pb, f"{path}.wq", d, d, "d_model", "heads"),
+        "wk": L.init_dense(pb, f"{path}.wk", d, d, "d_model", "heads"),
+        "wv": L.init_dense(pb, f"{path}.wv", d, d, "d_model", "heads"),
+        "w_if": L.init_dense(pb, f"{path}.w_if", d, 2 * H, "d_model", None,
+                             bias=True),
+        "gn": init_groupnorm(pb, f"{path}.gn", d),
+        "down": L.init_dense(pb, f"{path}.down", d, d, "d_ff", "d_model"),
+    }
+
+
+def init_groupnorm(pb: L.ParamBuilder, path: str, dim: int):
+    return {"scale": pb.param(f"{path}.scale", (dim,), ("d_model",), "ones")}
+
+
+def groupnorm_heads(params, x, n_heads: int, eps: float = 1e-6):
+    """Per-head RMS normalization of (B,S,H,dh) flattened to (B,S,d)."""
+    B, S, H, dh = x.shape
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    y = y.reshape(B, S, H * dh) * params["scale"].astype(jnp.float32)
+    return y
+
+
+def _mlstm_cell_scan(q, k, v, i_pre, f_pre, state=None):
+    """q,k,v: (B,S,H,dh); i_pre,f_pre: (B,S,H) pre-activation gates.
+
+    Stabilized exponential gating (xLSTM eq. 19-26).
+    Returns h: (B,S,H,dh) and final state (C, n, m).
+    """
+    B, S, H, dh = q.shape
+    if state is None:
+        C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+        n0 = jnp.zeros((B, H, dh), jnp.float32)
+        m0 = jnp.full((B, H), -jnp.inf, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    def step(carry, inp):
+        C, n, m = carry
+        qt, kt, vt, it, ft = inp                         # (B,H,dh)...
+        log_f = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(log_f + m, it)
+        i_act = jnp.exp(it - m_new)
+        f_act = jnp.exp(log_f + m - m_new)
+        C = f_act[..., None, None] * C + i_act[..., None, None] * (
+            vt[..., :, None] * kt[..., None, :])          # (B,H,dv,dk)
+        n = f_act[..., None] * n + i_act[..., None] * kt
+        num = jnp.einsum("bhvk,bhk->bhv", C, qt)
+        den = jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt))
+        den = jnp.maximum(den, jnp.exp(-m_new))
+        h = num / den[..., None]
+        return (C, n, m_new), h
+
+    xs = (jnp.moveaxis(q.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(k.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(v.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(i_pre.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(f_pre.astype(jnp.float32), 1, 0))
+    (C, n, m), hs = jax.lax.scan(step, (C0, n0, m0), xs)
+    return jnp.moveaxis(hs, 0, 1), (C, n, m)
+
+
+def _mlstm_cell_chunked(q, k, v, i_pre, f_pre, state=None,
+                        chunk: int = 64):
+    """Chunkwise-parallel mLSTM — EXACT reformulation of
+    :func:`_mlstm_cell_scan` (same stabilized exponential gating), but the
+    matrix state (B,H,dv,dk) is read/written once per *chunk* instead of
+    once per step: HBM traffic for the state drops by the chunk length,
+    at the cost of an O(L^2) intra-chunk attention-like term (tiny for
+    L=64).  This is the perf-critical path for xLSTM training/prefill
+    (EXPERIMENTS.md §Perf, xlstm-1.3b/train_4k).
+
+    Derivation: unrolling m_t = max(lf_t + m_{t-1}, li_t) within a chunk
+    gives m_t = b_t + M_t with b_t = cumsum(lf), a_s = li_s - b_s and
+    M_t = max(m_prev, cummax_{s<=t} a_s); every exp() in the sequential
+    cell then factors into exp(m_prev - M_t) (inter-chunk) and
+    exp(a_s - M_t) (intra-chunk) weights.
+    """
+    B, S, H, dh = q.shape
+    L = min(chunk, S)
+    if S % L != 0:
+        pad = L - S % L
+
+        def zpad(x, val=0.0):
+            return jnp.pad(x, [(0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 2),
+                           constant_values=val)
+
+        # padded steps must be state-identities: i = 0 (li -> -inf-ish),
+        # f = 1 (lf -> 0, i.e. f_pre -> +inf-ish)
+        out = _mlstm_cell_chunked(zpad(q), zpad(k), zpad(v),
+                                  zpad(i_pre, -1e9), zpad(f_pre, 1e9),
+                                  state, chunk)
+        return out[0][:, :S], out[1]
+    n_chunks = S // L
+    if state is None:
+        C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+        n0 = jnp.zeros((B, H, dh), jnp.float32)
+        m0 = jnp.full((B, H), -jnp.inf, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    def to_chunks(x):  # (B,S,H,...) -> (n, B, H, L, ...)
+        x = jnp.moveaxis(x, 2, 1)                          # (B,H,S,...)
+        x = x.reshape(x.shape[:2] + (n_chunks, L) + x.shape[3:])
+        return jnp.moveaxis(x, 2, 0)                       # (n,B,H,L,..)
+
+    qc = to_chunks(q.astype(jnp.float32))
+    kc = to_chunks(k.astype(jnp.float32))
+    vc = to_chunks(v.astype(jnp.float32))
+    lic = to_chunks(i_pre.astype(jnp.float32))
+    lfc = to_chunks(jax.nn.log_sigmoid(f_pre.astype(jnp.float32)))
+
+    causal = jnp.tril(jnp.ones((L, L), bool))
+
+    def chunk_step(carry, inp):
+        C, n, m_prev = carry                   # (B,H,dh,dh),(B,H,dh),(B,H)
+        qb, kb, vb, li, lf = inp               # (B,H,L,...)
+        b = jnp.cumsum(lf, axis=-1)            # (B,H,L)
+        a = li - b
+        Mt = jnp.maximum(m_prev[..., None], jax.lax.cummax(a, axis=2))
+        inter_scale = jnp.exp(m_prev[..., None] - Mt)       # (B,H,L)
+        # intra-chunk weights w[t,s] = exp(a_s - M_t), s<=t
+        w = jnp.exp(a[..., None, :] - Mt[..., :, None])
+        w = jnp.where(causal, w, 0.0)
+        scores = jnp.einsum("bhld,bhsd->bhls", qb, kb) * w
+        num = (inter_scale[..., None]
+               * jnp.einsum("bhld,bhvd->bhlv", qb, C)
+               + jnp.einsum("bhls,bhsv->bhlv", scores, vb))
+        den = (inter_scale * jnp.einsum("bhld,bhd->bhl", qb, n)
+               + jnp.sum(scores, axis=-1))
+        guard = jnp.exp(-(b + Mt))
+        h = num / jnp.maximum(jnp.abs(den), guard)[..., None]
+        # carry update to chunk end (t = L)
+        B_tot = b[..., -1]
+        M_L = Mt[..., -1]
+        gain = jnp.exp(a - M_L[..., None])                  # (B,H,L)
+        C = (jnp.exp(m_prev - M_L)[..., None, None] * C
+             + jnp.einsum("bhs,bhsv,bhsd->bhvd", gain, vb, kb))
+        n = (jnp.exp(m_prev - M_L)[..., None] * n
+             + jnp.einsum("bhs,bhsd->bhd", gain, kb))
+        m_new = B_tot + M_L
+        return (C, n, m_new), h
+
+    (C, n, m), hs = jax.lax.scan(chunk_step, (C0, n0, m0),
+                                 (qc, kc, vc, lic, lfc))
+    # hs: (n, B, H, L, dh) -> (B, S, H, dh)
+    hs = jnp.moveaxis(hs, 0, 2)                # (B,H,n,L,dh)
+    hs = hs.reshape(B, H, S, dh)
+    return jnp.moveaxis(hs, 1, 2), (C, n, m)
+
+
+def mlstm_block(params, x, cfg: ModelConfig, rules: AxisRules,
+                state=None, decode: bool = False):
+    cdt = cfg.jnp_compute_dtype()
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    up = L.dense(params["up"], x, cdt)
+    xm, z = jnp.split(up, 2, axis=-1)
+    if decode:
+        xc, conv_state = L.causal_conv1d(params["conv"], xm, state["conv"])
+    else:
+        xc = L.causal_conv1d(params["conv"], xm)
+        conv_state = jnp.concatenate(
+            [jnp.zeros_like(xm[:, :cfg.conv_width - 1]), xm],
+            axis=1)[:, -(cfg.conv_width - 1):]
+    xc = jax.nn.silu(xc)
+    q = L.dense(params["wq"], xc, cdt).reshape(B, S, H, dh)
+    k = L.dense(params["wk"], xc, cdt).reshape(B, S, H, dh) * (dh ** -0.5)
+    v = L.dense(params["wv"], xm, cdt).reshape(B, S, H, dh)
+    gates = L.dense(params["w_if"], xc, jnp.float32)
+    i_pre, f_pre = jnp.split(gates, 2, axis=-1)           # (B,S,H)
+    cell_state = None if state is None else state["cell"]
+    if cfg.mlstm_chunk > 0 and not decode and S > 1:
+        h, new_cell = _mlstm_cell_chunked(q, k, v, i_pre, f_pre,
+                                          cell_state, cfg.mlstm_chunk)
+    else:
+        h, new_cell = _mlstm_cell_scan(q, k, v, i_pre, f_pre, cell_state)
+    h = groupnorm_heads(params["gn"], h, H).astype(cdt)
+    y = h * jax.nn.silu(z)
+    out = L.dense(params["down"], y, cdt)
+    new_state = {"cell": new_cell, "conv": conv_state}
+    return constrain(out, rules, ("batch", None, None)), new_state
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int):
+    d, H = cfg.d_model, cfg.n_heads
+    dh = d // H
+    return {
+        "cell": (jnp.zeros((batch, H, dh, dh), jnp.float32),
+                 jnp.zeros((batch, H, dh), jnp.float32),
+                 jnp.full((batch, H), -jnp.inf, jnp.float32)),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_model),
+                          cfg.jnp_compute_dtype()),
+    }
+
+
+# ===========================================================================
+# sLSTM block (xLSTM) — scalar memory with recurrent gate connections
+# ===========================================================================
+
+def init_slstm(pb: L.ParamBuilder, path: str, cfg: ModelConfig):
+    d = cfg.d_model
+    return {
+        "wx": L.init_dense(pb, f"{path}.wx", d, 4 * d, "d_model", "d_ff",
+                           bias=True),
+        "r": pb.param(f"{path}.r", (d, 4 * d), ("d_model", "d_ff"),
+                      "normal", 0.02),
+        "gn": init_groupnorm(pb, f"{path}.gn", d),
+        "out": L.init_dense(pb, f"{path}.out", d, d, "d_model", "d_model"),
+    }
+
+
+def _slstm_cell_scan(gx, r_w, d: int, state=None):
+    """gx: (B,S,4d) input contributions to (z,i,f,o) gates."""
+    B, S, _ = gx.shape
+    if state is None:
+        c0 = jnp.zeros((B, d), jnp.float32)
+        n0 = jnp.ones((B, d), jnp.float32)
+        h0 = jnp.zeros((B, d), jnp.float32)
+        m0 = jnp.zeros((B, d), jnp.float32)
+    else:
+        c0, n0, h0, m0 = state
+
+    def step(carry, gxt):
+        c, n, h, m = carry
+        g = gxt + h @ r_w.astype(jnp.float32)             # recurrent conn
+        z_pre, i_pre, f_pre, o_pre = jnp.split(g, 4, axis=-1)
+        z = jnp.tanh(z_pre)
+        o = jax.nn.sigmoid(o_pre)
+        log_f = jax.nn.log_sigmoid(f_pre)
+        m_new = jnp.maximum(log_f + m, i_pre)
+        i_act = jnp.exp(i_pre - m_new)
+        f_act = jnp.exp(log_f + m - m_new)
+        c = f_act * c + i_act * z
+        n = f_act * n + i_act
+        h = o * c / jnp.maximum(n, 1e-6)
+        return (c, n, h, m_new), h
+
+    xs = jnp.moveaxis(gx.astype(jnp.float32), 1, 0)
+    (c, n, h, m), hs = jax.lax.scan(step, (c0, n0, h0, m0), xs)
+    return jnp.moveaxis(hs, 0, 1), (c, n, h, m)
+
+
+def slstm_block(params, x, cfg: ModelConfig, rules: AxisRules,
+                state=None, decode: bool = False):
+    cdt = cfg.jnp_compute_dtype()
+    B, S, d = x.shape
+    gx = L.dense(params["wx"], x, jnp.float32)
+    cell_state = None if state is None else state["cell"]
+    h, new_cell = _slstm_cell_scan(gx, params["r"], d, cell_state)
+    h = groupnorm_heads(params["gn"], h.reshape(B, S, cfg.n_heads,
+                                                d // cfg.n_heads),
+                        cfg.n_heads).astype(cdt)
+    out = L.dense(params["out"], h, cdt)
+    return constrain(out, rules, ("batch", None, None)), {"cell": new_cell}
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    return {"cell": (jnp.zeros((batch, d), jnp.float32),
+                     jnp.ones((batch, d), jnp.float32),
+                     jnp.zeros((batch, d), jnp.float32),
+                     jnp.zeros((batch, d), jnp.float32))}

@@ -1,0 +1,171 @@
+"""Optimizers (optax-style minimal): SGD(+momentum), AdamW, Adafactor,
+ZO-SGD.  Adafactor exists because Adam's O(2d) f32 states cannot fit for
+the 1T-param MoE on 512 x 16 GB chips; factored second moments can.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable  # (grads, state, params) -> (new_params, new_state)
+
+
+class _Out:
+    """Opaque (unregistered => leaf) container for multi-value tree.map."""
+    __slots__ = ("vals",)
+
+    def __init__(self, *vals):
+        self.vals = vals
+
+
+def _pick(i, tree):
+    return jax.tree.map(lambda o: o.vals[i], tree,
+                        is_leaf=lambda x: isinstance(x, _Out))
+
+
+def sgd(lr, momentum: float = 0.0, weight_decay: float = 0.0):
+    def init(params):
+        if momentum == 0.0:
+            return {"step": jnp.zeros((), jnp.int32)}
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                  params)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = lr(step) if callable(lr) else lr
+
+        def upd(p, g, m=None):
+            g = g.astype(jnp.float32)
+            if weight_decay:
+                g = g + weight_decay * p.astype(jnp.float32)
+            if m is not None:
+                m = momentum * m + g
+                g = m
+            new_p = p.astype(jnp.float32) - lr_t * g
+            return _Out(new_p.astype(p.dtype), m)
+
+        if momentum == 0.0:
+            pm = jax.tree.map(lambda p, g: upd(p, g), params, grads)
+            return _pick(0, pm), {"step": step}
+        pm = jax.tree.map(upd, params, grads, state["m"])
+        return _pick(0, pm), {"step": step, "m": _pick(1, pm)}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0):
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(z, params),
+                "v": jax.tree.map(z, params)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = lr(step) if callable(lr) else lr
+        b1t = 1.0 - b1 ** step.astype(jnp.float32)
+        b2t = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            mh = m / b1t
+            vh = v / b2t
+            u = mh / (jnp.sqrt(vh) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return _Out((p.astype(jnp.float32) - lr_t * u).astype(p.dtype),
+                        m, v)
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        return (_pick(0, out),
+                {"step": step, "m": _pick(1, out), "v": _pick(2, out)})
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr, decay=0.8, eps=1e-30, clip_threshold=1.0,
+              weight_decay=0.0):
+    """Factored second moments: O(rows+cols) state for matrices."""
+    def _factored(shape):
+        return len(shape) >= 2
+
+    def init(params):
+        def st(p):
+            if _factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"step": jnp.zeros((), jnp.int32),
+                "v": jax.tree.map(st, params,
+                                  is_leaf=lambda x: hasattr(x, "shape"))}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = lr(step) if callable(lr) else lr
+        beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** (-decay)
+
+        def upd(p, g, v):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if _factored(p.shape):
+                vr = beta * v["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * v["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                rms_r = vr / jnp.maximum(
+                    jnp.mean(vr, axis=-1, keepdims=True), eps)
+                u = g * jax.lax.rsqrt(rms_r[..., None] + eps) \
+                    * jax.lax.rsqrt(vc[..., None, :] + eps) \
+                    * jnp.sqrt(jnp.maximum(
+                        jnp.mean(vc, axis=-1)[..., None, None], eps))
+                nv = {"vr": vr, "vc": vc}
+            else:
+                nv = {"v": beta * v["v"] + (1 - beta) * g2}
+                u = g * jax.lax.rsqrt(nv["v"] + eps)
+            # update clipping
+            rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return _Out((p.astype(jnp.float32) - lr_t * u).astype(p.dtype),
+                        nv)
+
+        is_v = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_v = jax.tree.leaves(state["v"], is_leaf=is_v)
+        out = [upd(p, g, v) for p, g, v in zip(flat_p, flat_g, flat_v)]
+        new_params = jax.tree.unflatten(tdef, [o.vals[0] for o in out])
+        new_v = jax.tree.unflatten(tdef, [o.vals[1] for o in out])
+        return new_params, {"step": step, "v": new_v}
+
+    return Optimizer(init, update)
+
+
+def zo_sgd(lr):
+    """Plain SGD for ZO gradient estimates (paper's client optimizer)."""
+    return sgd(lr, momentum=0.0)
+
+
+def make_optimizer(name: str, lr, **kw) -> Optimizer:
+    return {"sgd": sgd, "sgdm": lambda l, **k: sgd(l, momentum=0.9, **k),
+            "adamw": adamw, "adam": adamw, "adafactor": adafactor,
+            "zo_sgd": zo_sgd}[name](lr, **kw)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    nrm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                       for g in jax.tree.leaves(grads)) + 1e-30)
+    scale = jnp.minimum(1.0, max_norm / nrm)
+    return jax.tree.map(lambda g: g * scale, grads), nrm

@@ -1,0 +1,56 @@
+"""Checkpointing: round-trip, bf16, keep-k GC, resume semantics."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as C
+
+
+def tree():
+    return {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16),
+                  "d": jnp.asarray(3, jnp.int32)},
+            "e": (jnp.zeros(2), jnp.full((1,), 7.5))}
+
+
+def test_roundtrip(tmp_path):
+    t = tree()
+    C.save(str(tmp_path), 5, t)
+    restored, step = C.restore(str(tmp_path), t)
+    assert step == 5
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_keep_k_gc(tmp_path):
+    t = tree()
+    for s in range(6):
+        C.save(str(tmp_path), s, t, keep=3)
+    assert C.all_steps(str(tmp_path)) == [3, 4, 5]
+    assert C.latest_step(str(tmp_path)) == 5
+
+
+def test_restore_specific_step(tmp_path):
+    t = tree()
+    C.save(str(tmp_path), 1, t, keep=5)
+    t2 = jax.tree.map(lambda x: x + 1 if jnp.issubdtype(
+        x.dtype, jnp.floating) else x, t)
+    C.save(str(tmp_path), 2, t2, keep=5)
+    r1, _ = C.restore(str(tmp_path), t, step=1)
+    np.testing.assert_array_equal(np.asarray(r1["a"]), np.asarray(t["a"]))
+
+
+def test_structure_mismatch_raises(tmp_path):
+    C.save(str(tmp_path), 0, tree())
+    with pytest.raises(AssertionError):
+        C.restore(str(tmp_path), {"only": jnp.zeros(1)})
+
+
+def test_missing_dir_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        C.restore(str(tmp_path / "nope"), tree())

@@ -1,0 +1,89 @@
+"""Per-kernel validation: shape/dtype sweeps vs the pure-jnp oracles
+(interpret mode executes the kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("m,k,n", [(32, 128, 128), (64, 256, 128),
+                                   (128, 128, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_zo_matmul_shapes_dtypes(m, k, n, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(0), (m, k)).astype(dtype)
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n)).astype(dtype)
+    u = ops.zo_noise(w, 7, bk=128, bn=128)
+    y_k = ops.zo_matmul(x, w, 7, 0.05, bm=32, bn=128, bk=128)
+    y_r = ref.zo_matmul_ref(x, w, u, 0.05)
+    tol = 5e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                               np.asarray(y_r, np.float32),
+                               rtol=tol, atol=tol * 10)
+
+
+def test_zo_matmul_seed_determinism_and_variation():
+    w = jax.random.normal(jax.random.PRNGKey(1), (128, 128))
+    u1 = ops.zo_noise(w, 7)
+    u2 = ops.zo_noise(w, 7)
+    u3 = ops.zo_noise(w, 8)
+    np.testing.assert_array_equal(np.asarray(u1), np.asarray(u2))
+    assert float(jnp.max(jnp.abs(u1 - u3))) > 0.1
+
+
+def test_zo_noise_statistics():
+    w = jnp.zeros((512, 512))
+    u = ops.zo_noise(w, 123)
+    assert abs(float(u.mean())) < 0.02
+    assert abs(float(u.var()) - 1.0) < 0.05    # unit variance uniform
+
+
+def test_zo_clean_path_is_plain_matmul():
+    x = jax.random.normal(jax.random.PRNGKey(0), (32, 128))
+    w = jax.random.normal(jax.random.PRNGKey(1), (128, 128))
+    y = ops.zo_matmul(x, w, 0, 0.0, perturb=False, bm=32)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref.matmul_ref(
+        x, w)), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("seq,h,kv,d", [(64, 4, 2, 32), (48, 4, 4, 16),
+                                        (64, 8, 1, 32)])
+@pytest.mark.parametrize("kwargs", [dict(causal=True),
+                                    dict(causal=True, window=17),
+                                    dict(causal=True, cap=30.0),
+                                    dict(causal=False)])
+def test_flash_attention_sweep(seq, h, kv, d, kwargs):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (2, seq, h, d))
+    k = jax.random.normal(ks[1], (2, seq, kv, d))
+    v = jax.random.normal(ks[2], (2, seq, kv, d))
+    o_k = ops.flash_attention(q, k, v, bq=16, bk=16, **kwargs)
+    o_r = ref.flash_attention_ref(q, k, v, **kwargs)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 32, 4, 32)).astype(jnp.bfloat16)
+    k = jax.random.normal(ks[1], (1, 32, 2, 32)).astype(jnp.bfloat16)
+    v = jax.random.normal(ks[2], (1, 32, 2, 32)).astype(jnp.bfloat16)
+    o_k = ops.flash_attention(q, k, v, bq=16, bk=16, causal=True)
+    o_r = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(o_k, np.float32),
+                               np.asarray(o_r, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+@pytest.mark.parametrize("b,s,w,bt,bw", [(2, 64, 32, 16, 16),
+                                         (1, 128, 64, 32, 64),
+                                         (3, 32, 16, 8, 16)])
+def test_rg_lru_scan_sweep(b, s, w, bt, bw):
+    a = jax.random.uniform(jax.random.PRNGKey(5), (b, s, w),
+                           minval=0.3, maxval=0.999)
+    bb = jax.random.normal(jax.random.PRNGKey(6), (b, s, w))
+    h_k = ops.rg_lru_scan(a, bb, bt=bt, bw=bw)
+    h_r = ref.rg_lru_scan_ref(a, bb)
+    np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_r),
+                               rtol=2e-4, atol=2e-5)

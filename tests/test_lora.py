@@ -1,0 +1,71 @@
+"""LoRA: injection, equivalence at init, merge, trainable filtering."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.split import partition
+from repro.distributed.sharding import AxisRules
+from repro.models import lora as LoRA
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+RULES = AxisRules(mesh=None)
+
+
+def cfg():
+    return ModelConfig(name="t", n_layers=2, d_model=32, n_heads=4,
+                       n_kv_heads=2, d_ff=64, vocab=31, cut_layers=1,
+                       param_dtype="float32", compute_dtype="float32")
+
+
+def test_lora_identity_at_init():
+    c = cfg()
+    params = T.init_lm(jax.random.PRNGKey(0), c)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, c.vocab)
+    base = T.full_forward(params, c, RULES, toks)
+    lparams = LoRA.add_lora(jax.random.PRNGKey(2), params, rank=4)
+    with_lora = T.full_forward(lparams, c, RULES, toks)
+    # b is zero-init => identical function at init
+    np.testing.assert_allclose(np.asarray(base), np.asarray(with_lora),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_lora_changes_after_b_update():
+    c = cfg()
+    params = LoRA.add_lora(jax.random.PRNGKey(2),
+                           T.init_lm(jax.random.PRNGKey(0), c), rank=4)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, c.vocab)
+    y0 = T.full_forward(params, c, RULES, toks)
+    bumped = jax.tree_util.tree_map_with_path(
+        lambda p, x: x + 0.1 if "lora_b" in "/".join(
+            str(getattr(k, "key", k)) for k in p) else x, params)
+    y1 = T.full_forward(bumped, c, RULES, toks)
+    assert float(jnp.max(jnp.abs(y1 - y0))) > 1e-4
+
+
+def test_merge_lora_equivalent():
+    c = cfg()
+    params = LoRA.add_lora(jax.random.PRNGKey(2),
+                           T.init_lm(jax.random.PRNGKey(0), c), rank=4)
+    # give b some value
+    params = jax.tree_util.tree_map_with_path(
+        lambda p, x: x + 0.05 if "lora_b" in "/".join(
+            str(getattr(k, "key", k)) for k in p) else x, params)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, c.vocab)
+    y_adapter = T.full_forward(params, c, RULES, toks)
+    y_merged = T.full_forward(LoRA.merge_lora(params), c, RULES, toks)
+    np.testing.assert_allclose(np.asarray(y_adapter),
+                               np.asarray(y_merged), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_lora_trainable_partition():
+    c = cfg()
+    params = LoRA.add_lora(jax.random.PRNGKey(2),
+                           T.init_lm(jax.random.PRNGKey(0), c), rank=4)
+    sel, rest = partition(params, LoRA.lora_pred)
+    n_sel = sum(x is not None and hasattr(x, "shape")
+                for x in jax.tree.leaves(sel))
+    assert n_sel > 0
+    for path_leaf in jax.tree.leaves(sel):
+        assert path_leaf is not None

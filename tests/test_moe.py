@@ -1,0 +1,65 @@
+"""MoE: routing, capacity semantics, dispatch paths agree."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed.sharding import AxisRules
+from repro.models import moe as M
+from repro.models.config import LayerSpec, ModelConfig, MoECfg
+from repro.models.layers import ParamBuilder
+
+
+def make(moe=None, d=32):
+    cfg = ModelConfig(name="t", n_layers=1, d_model=d, n_heads=4,
+                      n_kv_heads=4, d_ff=0, vocab=64,
+                      moe=moe or MoECfg(n_experts=8, top_k=2,
+                                        d_ff_expert=16,
+                                        capacity_factor=4.0),
+                      param_dtype="float32", compute_dtype="float32")
+    pb = ParamBuilder(jax.random.PRNGKey(0), "init", jnp.float32)
+    return cfg, M.init_moe(pb, "moe", cfg)
+
+
+def test_route_normalized():
+    cfg, params = make()
+    x = jax.random.normal(jax.random.PRNGKey(1), (24, 32))
+    gates, idx = M.route(params["router"], x, cfg)
+    assert gates.shape == (24, 2) and idx.shape == (24, 2)
+    np.testing.assert_allclose(np.asarray(jnp.sum(gates, -1)), 1.0,
+                               rtol=1e-5)
+    assert bool(jnp.all(idx >= 0)) and bool(jnp.all(idx < 8))
+
+
+def test_xla_matches_reference_high_capacity():
+    """With capacity_factor high enough nothing drops => exact match."""
+    cfg, params = make()
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 16, 32))
+    rules = AxisRules(mesh=None)
+    ref = M.moe_reference(params, x, cfg)
+    xla = M.moe_xla(params, x, cfg, rules)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(xla),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_capacity_drops_tokens():
+    cfg, params = make(MoECfg(n_experts=2, top_k=1, d_ff_expert=16,
+                              capacity_factor=0.25))
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 32, 32))
+    rules = AxisRules(mesh=None)
+    out = M.moe_xla(params, x, cfg, rules)
+    assert out.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(out)))
+    # some tokens must pass through as zero contribution (dropped)
+    norms = jnp.linalg.norm(out.reshape(32, 32), axis=-1)
+    assert int(jnp.sum(norms < 1e-9)) > 0
+
+
+def test_shared_expert_branch():
+    cfg, params = make(MoECfg(n_experts=4, top_k=2, d_ff_expert=16,
+                              capacity_factor=4.0, n_shared_experts=1))
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 8, 32))
+    rules = AxisRules(mesh=None)
+    out = M.moe_xla(params, x, cfg, rules)
+    assert "shared" in params
+    assert bool(jnp.all(jnp.isfinite(out)))

@@ -1,0 +1,107 @@
+"""Beyond-paper perf knobs must be exact (or bounded) reformulations."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed.sharding import AxisRules
+from repro.models import recurrent as R
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+RULES = AxisRules(mesh=None)
+
+
+def _cell_inputs(S=96, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    B, H, dh = 2, 2, 16
+    return (jax.random.normal(ks[0], (B, S, H, dh)),
+            jax.random.normal(ks[1], (B, S, H, dh)) * dh ** -0.5,
+            jax.random.normal(ks[2], (B, S, H, dh)),
+            jax.random.normal(ks[3], (B, S, H)) * 2,
+            jax.random.normal(ks[4], (B, S, H)) * 2 + 1)
+
+
+@pytest.mark.parametrize("chunk", [16, 32, 96, 40])
+def test_chunkwise_mlstm_exact(chunk):
+    q, k, v, ip, fp = _cell_inputs()
+    h1, (C1, n1, m1) = R._mlstm_cell_scan(q, k, v, ip, fp)
+    h2, (C2, n2, m2) = R._mlstm_cell_chunked(q, k, v, ip, fp, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               rtol=2e-3, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(C1), np.asarray(C2),
+                               rtol=2e-3, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(m2),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_chunkwise_mlstm_with_carried_state():
+    q, k, v, ip, fp = _cell_inputs()
+    B, H, dh = 2, 2, 16
+    st = (jax.random.normal(jax.random.PRNGKey(9), (B, H, dh, dh)),
+          jax.random.normal(jax.random.PRNGKey(10), (B, H, dh)),
+          jnp.zeros((B, H)))
+    h1, _ = R._mlstm_cell_scan(q, k, v, ip, fp, st)
+    h2, _ = R._mlstm_cell_chunked(q, k, v, ip, fp, st, chunk=32)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               rtol=2e-3, atol=2e-4)
+
+
+def _tiny(**kw):
+    return ModelConfig(name="t", n_layers=2, d_model=32, n_heads=4,
+                       n_kv_heads=2, d_ff=64, vocab=31, cut_layers=1,
+                       param_dtype="float32", compute_dtype="float32",
+                       q_chunk=8, kv_chunk=8, **kw)
+
+
+def test_seq_sharding_forward_equivalent():
+    cfg = _tiny()
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0, 31)
+    y1 = T.full_forward(params, cfg, RULES, toks)
+    y2 = T.full_forward(params, cfg.replace(seq_sharding=True), RULES,
+                        toks)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_attn_p_dtype_bounded_error():
+    cfg = _tiny()
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0, 31)
+    y1 = T.full_forward(params, cfg, RULES, toks)
+    y2 = T.full_forward(params, cfg.replace(attn_p_dtype="bfloat16"),
+                        RULES, toks)
+    # bf16 p matrix: small bounded perturbation of the logits
+    assert float(jnp.max(jnp.abs(y1 - y2))) < 0.15
+
+
+def test_mlstm_chunk_in_full_model():
+    from repro.configs.registry import get_config
+    cfg = get_config("xlstm-1.3b", smoke=True)
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0,
+                              cfg.vocab)
+    y1 = T.full_forward(params, cfg, RULES, toks)
+    y2 = T.full_forward(params, cfg.replace(mlstm_chunk=8), RULES, toks)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_remat_policy_save_gathers_runs():
+    """save_gathers lowers and matches default remat numerically on the
+    single-device path (policy only affects what's saved)."""
+    from repro.models.config import LayerSpec, MoECfg
+    cfg = ModelConfig(name="t", n_layers=2, d_model=32, n_heads=4,
+                      n_kv_heads=2, d_ff=0, vocab=31, cut_layers=1,
+                      pattern=(LayerSpec(ffn="moe"),),
+                      moe=MoECfg(n_experts=4, top_k=2, d_ff_expert=16,
+                                 capacity_factor=4.0),
+                      param_dtype="float32", compute_dtype="float32")
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 31)
+    y1 = T.full_forward(params, cfg, RULES, toks)
+    y2 = T.full_forward(params, cfg.replace(remat_policy="save_gathers"),
+                        RULES, toks)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-5, atol=1e-6)

@@ -1,0 +1,60 @@
+"""Recurrent mixers: streaming decode == full-sequence forward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed.sharding import AxisRules
+from repro.models import recurrent as R
+from repro.models.config import ModelConfig
+from repro.models.layers import ParamBuilder
+
+RULES = AxisRules(mesh=None)
+
+
+def cfg_for(kind):
+    return ModelConfig(name="t", n_layers=1, d_model=32, n_heads=4,
+                       n_kv_heads=4, d_ff=0, vocab=64, lru_width=32,
+                       param_dtype="float32", compute_dtype="float32")
+
+
+@pytest.mark.parametrize("kind,init_p,block,init_s", [
+    ("rg_lru", R.init_rg_lru, R.rg_lru_block, R.init_rg_lru_state),
+    ("mlstm", R.init_mlstm, R.mlstm_block, R.init_mlstm_state),
+    ("slstm", R.init_slstm, R.slstm_block, R.init_slstm_state),
+])
+def test_streaming_matches_full(kind, init_p, block, init_s):
+    cfg = cfg_for(kind)
+    pb = ParamBuilder(jax.random.PRNGKey(0), "init", jnp.float32)
+    params = init_p(pb, kind, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, 32)) * 0.5
+    full, _ = block(params, x, cfg, RULES)
+    state = init_s(cfg, 2)
+    outs = []
+    for t in range(12):
+        o, state = block(params, x[:, t:t + 1], cfg, RULES, state=state,
+                         decode=True)
+        outs.append(o)
+    stream = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(stream),
+                               rtol=2e-3, atol=2e-4)
+
+
+def test_rg_lru_stability():
+    """|a| < 1 by construction => bounded state for bounded input."""
+    cfg = cfg_for("rg_lru")
+    pb = ParamBuilder(jax.random.PRNGKey(0), "init", jnp.float32)
+    params = R.init_rg_lru(pb, "rg", cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 256, 32))
+    out, st = R.rg_lru_block(params, x, cfg, RULES)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    assert float(jnp.max(jnp.abs(st["h"]))) < 100.0
+
+
+def test_mlstm_long_sequence_stable():
+    cfg = cfg_for("mlstm")
+    pb = ParamBuilder(jax.random.PRNGKey(0), "init", jnp.float32)
+    params = R.init_mlstm(pb, "m", cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 128, 32))
+    out, _ = R.mlstm_block(params, x, cfg, RULES)
+    assert bool(jnp.all(jnp.isfinite(out)))

@@ -1,0 +1,44 @@
+"""AxisRules: divisibility fallback, axis dedup, logical resolution."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import AxisRules, DATA_AXES
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def test_resolve_basic(mesh):
+    rules = AxisRules(mesh=mesh)
+    spec = rules.resolve(("batch", None, "d_ff"))
+    assert spec == P("data", None, "model")
+
+
+def test_divisibility_fallback():
+    # fake a mesh shape via a 1x1 mesh but logic checks dim % size
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    rules = AxisRules(mesh=mesh)
+    # axis size 1 => never sharded (size>1 required)
+    spec = rules.spec_for((12, 64), ("heads", "d_ff"))
+    assert spec == P(None, None)
+
+
+def test_axis_dedup(mesh):
+    rules = AxisRules(mesh=mesh)
+    # batch uses data; seq_shard would also use data -> deduped to None
+    spec = rules.resolve(("batch", "seq_shard", None))
+    assert spec[1] is None or spec[1] != spec[0]
+
+
+def test_fsdp_toggle(mesh):
+    rules = AxisRules(mesh=mesh, enable_fsdp=False)
+    spec = rules.resolve(("fsdp", "d_ff"))
+    assert spec[0] is None
+
+
+def test_with_updates(mesh):
+    rules = AxisRules(mesh=mesh).with_updates(d_model=DATA_AXES)
+    assert rules.rules["d_model"] == DATA_AXES
