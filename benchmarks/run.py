@@ -11,7 +11,13 @@ Prints ``name,us_per_call,derived`` CSV rows.
              HERON vs CSE-FSL vs SFLV2 (IID and non-IID).
   fig4     — ZO hyperparameter ablation: mu sweep + n_pairs sweep.
   fig6     — aux-model complexity ablation: HERON flat, FO needs capacity.
+  seed_replay — the lean uplink: dense vs (seed, coeff) bytes on the
+             wire, scan vs loop reconstruction wall-clock, and the
+             end-to-end federated round in both uplink modes.
   kernels  — wall-clock of the XLA hot paths + Pallas interpret sanity.
+
+Run all:          PYTHONPATH=src python benchmarks/run.py
+Run a subset:     PYTHONPATH=src python benchmarks/run.py seed_replay
 """
 from __future__ import annotations
 
@@ -292,6 +298,66 @@ def bench_fig6():
 
 
 # ---------------------------------------------------------------------------
+def bench_seed_replay():
+    """The lean uplink: bytes on the wire (dense vs (seed, coeff)) and
+    Fed-Server reconstruction wall-clock (flattened scan vs the
+    triple-loop reference it replaced)."""
+    from repro.core import aggregate as AG
+    from repro.core import protocols as P
+    from repro.core import zo as Z
+    from repro.core.split import param_bytes
+    from repro.data.pipeline import round_batches
+    from repro.data.synthetic import GaussianMixtureImages
+    from repro.models import cnn as CNN
+    from repro.optim.optimizers import make_optimizer
+
+    cfg = CNN.CNNConfig(widths=(16, 32), blocks_per_stage=1, classes=10,
+                        client_blocks=1)
+    params = CNN.init_cnn(jax.random.PRNGKey(0), cfg)
+    N, h, pairs, lr = 4, 2, 2, 2e-2
+    zo = Z.ZOConfig(mu=1e-3, n_pairs=pairs)
+
+    dense_b = N * param_bytes(params["client"])
+    lean_b = P.seed_replay_uplink_bytes(N, h, pairs)
+    row("seed_replay/uplink_bytes_dense", 0.0, f"{dense_b}B (N={N})")
+    row("seed_replay/uplink_bytes_lean", 0.0,
+        f"{lean_b}B reduction={dense_b / lean_b:.0f}x")
+
+    keys = Z.fold_in_range(jax.random.PRNGKey(7), N)
+    coeffs = jax.random.normal(jax.random.PRNGKey(8), (N, h, pairs))
+    scan_fn = jax.jit(lambda c: AG.seed_replay_aggregate(
+        params["client"], keys, c, lr, zo))
+    us_scan, out_scan = timeit(scan_fn, coeffs, n=3)
+    ref_fn = jax.jit(lambda c: AG.seed_replay_aggregate_reference(
+        params["client"], keys, c, lr, zo))
+    us_ref, out_ref = timeit(ref_fn, coeffs, n=3)
+    err = max(float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                    - b.astype(jnp.float32))))
+              for a, b in zip(jax.tree.leaves(out_scan),
+                              jax.tree.leaves(out_ref)))
+    row("seed_replay/reconstruct_scan", us_scan,
+        f"N*h*pairs={N * h * pairs}")
+    row("seed_replay/reconstruct_loop_ref", us_ref,
+        f"loop_over_scan={us_ref / us_scan:.2f} max_err={err:.2g}")
+
+    # end-to-end federated round, dense vs lean uplink
+    ds = GaussianMixtureImages(classes=10, hw=16, noise=0.8)
+    api = P.cnn_api(cfg)
+    fed = P.FedConfig(n_clients=N, h=h)
+    sopt = make_optimizer("adamw", 2e-3)
+    rb = round_batches(ds, jax.random.PRNGKey(3), N, h, 16)
+    state = {"client": params["client"], "server": params["server"],
+             "opt_server": sopt.init(params["server"])}
+    for uplink in ("dense", "seed_replay"):
+        rnd = jax.jit(P.make_fed_round(
+            api, "heron", zo, fed, make_optimizer("zo_sgd", lr), sopt,
+            uplink=uplink, client_lr=lr))
+        us, (_, m) = timeit(rnd, state, rb, jax.random.PRNGKey(9), n=3)
+        row(f"seed_replay/fed_round_{uplink}", us,
+            f"uplink_bytes={float(m['uplink_bytes']):.3g}")
+
+
+# ---------------------------------------------------------------------------
 def bench_kernels():
     from repro.kernels import ops
     from repro.models import attention as A
@@ -321,10 +387,25 @@ def bench_kernels():
         "pallas_interpret_smoke")
 
 
-def main() -> None:
+BENCHES = {
+    "table1": bench_table1, "table2": bench_table2,
+    "table3": bench_table3, "fig2": bench_fig2, "fig4": bench_fig4,
+    "fig6": bench_fig6, "seed_replay": bench_seed_replay,
+    "kernels": bench_kernels,
+}
+
+
+def main(argv=None) -> None:
+    import sys
+    names = list(argv if argv is not None else sys.argv[1:]) or \
+        list(BENCHES)
+    unknown = [n for n in names if n not in BENCHES]
+    if unknown:
+        raise SystemExit(f"unknown benchmark(s) {unknown}; "
+                         f"choose from {list(BENCHES)}")
     print("name,us_per_call,derived")
-    for fn in (bench_table1, bench_table2, bench_table3, bench_fig2,
-               bench_fig4, bench_fig6, bench_kernels):
+    for name in names:
+        fn = BENCHES[name]
         t0 = time.time()
         try:
             fn()

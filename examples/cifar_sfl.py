@@ -5,6 +5,8 @@ end-to-end federated training driver (Fig. 2 / Fig. 3 style runs).
 PYTHONPATH=src python examples/cifar_sfl.py                 # IID
 PYTHONPATH=src python examples/cifar_sfl.py --alpha 0.3     # non-IID
 PYTHONPATH=src python examples/cifar_sfl.py --participation 0.5
+PYTHONPATH=src python examples/cifar_sfl.py --uplink seed_replay \
+    --methods heron                       # lean (seed, coeff) uplink
 """
 import argparse
 
@@ -32,13 +34,17 @@ def run(method, args, cfg, ds, probs):
                       participation=args.participation,
                       straggler_prob=args.stragglers)
     api = P.cnn_api(cfg)
+    client_lr = 2e-2 if method == "heron" else 2e-3
     copt = make_optimizer("zo_sgd" if method == "heron" else "adamw",
-                          2e-2 if method == "heron" else 2e-3)
+                          client_lr)
     sopt = make_optimizer("adamw", 2e-3)
+    # the lean (seed, coeff) uplink is a ZO mechanism — HERON only
+    uplink = args.uplink if method == "heron" else "dense"
     rnd = jax.jit(P.make_fed_round(api, method,
                                    Z.ZOConfig(mu=args.mu,
                                               n_pairs=args.pairs),
-                                   fed, copt, sopt))
+                                   fed, copt, sopt, uplink=uplink,
+                                   client_lr=client_lr))
     params = CNN.init_cnn(jax.random.PRNGKey(0), cfg)
     state = {"client": params["client"], "server": params["server"],
              "opt_server": sopt.init(params["server"])}
@@ -50,6 +56,10 @@ def run(method, args, cfg, ds, probs):
                            client_probs=probs)
         state, m = rnd(state, rb, jax.random.fold_in(
             jax.random.PRNGKey(9), r))
+        if r == 0:
+            print(f"  [{method:8s}] uplink={uplink} "
+                  f"{float(m['uplink_bytes']):.3g} B/round "
+                  f"(dense: {float(m['uplink_bytes_dense']):.3g} B)")
         if (r + 1) % max(args.rounds // 8, 1) == 0:
             acc = evaluate(state, cfg, ds, jax.random.PRNGKey(12345))
             accs.append(acc)
@@ -71,6 +81,10 @@ def main():
     ap.add_argument("--stragglers", type=float, default=0.0)
     ap.add_argument("--mu", type=float, default=1e-3)
     ap.add_argument("--pairs", type=int, default=2)
+    ap.add_argument("--uplink", default="dense",
+                    choices=list(P.UPLINKS),
+                    help="HERON client->server weight channel; "
+                         "seed_replay = lean (seed, coeff) uplink")
     ap.add_argument("--methods", default="heron,cse_fsl,sflv2")
     args = ap.parse_args()
 

@@ -65,7 +65,8 @@ def fedavg_masked(stacked_params, mask, prev_global):
 # ---------------------------------------------------------------------------
 
 def seed_replay_aggregate(global_params, client_keys, client_coeffs,
-                          lr: float, zo: Z.ZOConfig, mask=None):
+                          lr: float, zo: Z.ZOConfig, mask=None,
+                          shardings=None):
     """Reconstruct the FedAvg'd client update from (seed, coeff) uplinks.
 
     client_keys: (N,) PRNG keys (one per client round); client_coeffs:
@@ -73,7 +74,52 @@ def seed_replay_aggregate(global_params, client_keys, client_coeffs,
     aggregated update equals FedAvg of the clients' local ZO trajectories
     to first order in lr (exact when h==1), at an uplink cost of
     O(h·n_pairs) floats per client instead of O(d).
+
+    The reconstruction is ONE jitted `lax.scan` over the flattened
+    (client, step, pair) axis: all N·h·n_pairs replay keys are derived
+    up front with a vmapped ``fold_in`` (key_imp = fold_in(fold_in(
+    client_keys[i], m), p) — the exact stream :func:`repro.core.zo.
+    zo_gradient` consumed on-client), each iteration regenerates one
+    direction and adds it into a single fp32 accumulator tree, and the
+    accumulator is applied to ``global_params`` once at the end.  With
+    ``shardings`` (a pytree of NamedShardings matching ``global_params``)
+    each regenerated direction is pinned to the parameter sharding, so
+    the server-side replay never replicates a full direction in HBM.
     """
+    n, h, n_pairs = client_coeffs.shape
+    if mask is None:
+        mask = jnp.ones((n,), jnp.float32)
+    tot = jnp.maximum(jnp.sum(mask), 1.0)
+
+    flat = jnp.arange(n * h * n_pairs)
+    i_idx = flat // (h * n_pairs)
+    m_idx = (flat // n_pairs) % h
+    p_idx = flat % n_pairs
+    keys = jax.vmap(lambda ck, m, p: jax.random.fold_in(
+        jax.random.fold_in(ck, m), p))(client_keys[i_idx], m_idx, p_idx)
+    scales = (-lr * client_coeffs.reshape(-1)
+              * mask[i_idx] / tot).astype(jnp.float32)
+
+    def replay_one(acc, key_scale):
+        kp, s = key_scale
+        u = Z.direction_like(kp, global_params, zo, shardings)
+        acc = jax.tree.map(lambda a, ul: a + s * ul, acc, u)
+        return acc, None
+
+    acc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                        global_params)
+    acc, _ = jax.lax.scan(replay_one, acc0, (keys, scales))
+    return jax.tree.map(
+        lambda p, a: (p.astype(jnp.float32) + a).astype(p.dtype),
+        global_params, acc)
+
+
+def seed_replay_aggregate_reference(global_params, client_keys,
+                                    client_coeffs, lr: float,
+                                    zo: Z.ZOConfig, mask=None):
+    """Unvectorized triple-loop reference for :func:`seed_replay_aggregate`
+    (N·h·n_pairs full-tree Python dispatches — kept only as the oracle
+    for tests and the `seed_replay` benchmark)."""
     n = client_coeffs.shape[0]
     if mask is None:
         mask = jnp.ones((n,), jnp.float32)
@@ -84,7 +130,7 @@ def seed_replay_aggregate(global_params, client_keys, client_coeffs,
             key_im = jax.random.fold_in(client_keys[i], m)
             for p in range(client_coeffs.shape[2]):
                 kp = jax.random.fold_in(key_im, p)
-                u = Z.unit_sphere_like(kp, global_params)
+                u = Z.direction_like(kp, global_params, zo)
                 scale = -lr * client_coeffs[i, m, p] * mask[i] / tot
                 out = Z.add_scaled(out, u, scale)
     return out

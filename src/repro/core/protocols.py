@@ -23,7 +23,7 @@ import jax.numpy as jnp
 
 from repro.core import aggregate as AG
 from repro.core import zo as Z
-from repro.core.split import combine, partition
+from repro.core.split import combine, param_bytes, partition
 from repro.distributed.sharding import AxisRules
 from repro.models import cnn as CNN
 from repro.models import transformer as T
@@ -280,17 +280,51 @@ class FedConfig:
     quantize_uplink: bool = False  # int8 smashed-data upload (pq/2)
 
 
+UPLINKS = ("dense", "seed_replay")
+
+
+def seed_replay_uplink_bytes(n_clients: int, h: int, n_pairs: int) -> int:
+    """Bytes on the wire for the lean uplink: per client one 64-bit PRNG
+    key plus h·n_pairs fp32 projected-gradient coefficients."""
+    return n_clients * (h * n_pairs * 4 + 8)
+
+
 def make_fed_round(api: ModelAPI, method: str, zo_cfg: Z.ZOConfig,
                    fed: FedConfig, client_opt: Optimizer,
-                   server_opt: Optimizer):
+                   server_opt: Optimizer, uplink: str = "dense",
+                   client_lr: float | None = None):
     """Returns round(state, round_batch, key) -> (state, metrics).
 
     state = {"client": global client params, "server": server params,
              "opt_server": ...}
     round_batch: pytree with leading (N, h, ...) dims; for enc-dec /
     aux-label tasks include the extra fields per ModelAPI.
+
+    ``uplink`` selects the client->Fed-Server weight channel:
+
+    * ``"dense"`` — clients upload their full local client params
+      (O(d) floats each) and the Fed-Server runs masked FedAvg.
+    * ``"seed_replay"`` — the paper's lean uplink (HERON only): client i
+      uploads its round PRNG key plus the (h, n_pairs) projected-gradient
+      coefficients — O(h·n_pairs) floats — and the Fed-Server
+      reconstructs the aggregate with the scan-vectorized
+      :func:`repro.core.aggregate.seed_replay_aggregate`.  Clients step
+      with plain SGD at ``client_lr`` (replay needs a linear, stateless
+      optimizer); the result matches the dense path to first order in
+      ``client_lr`` and exactly at ``h == 1``.
+
+    Both modes report ``uplink_bytes`` / ``uplink_bytes_dense`` metrics
+    so the O(d) -> O(h·n_pairs) reduction is observable per round.
     """
     assert method in METHODS
+    assert uplink in UPLINKS, uplink
+    if uplink == "seed_replay":
+        if method != "heron":
+            raise ValueError("seed_replay uplink requires the forward-only"
+                             f" ZO client (method='heron'), got {method!r}")
+        if client_lr is None:
+            raise ValueError("seed_replay uplink needs client_lr: the "
+                             "Fed-Server replays plain-SGD local steps")
 
     def local_update(cp, oc, batch, key):
         def closs(cpx):
@@ -299,10 +333,16 @@ def make_fed_round(api: ModelAPI, method: str, zo_cfg: Z.ZOConfig,
         if method == "heron":
             g, info = Z.zo_gradient(closs, cp, key, zo_cfg)
             loss, smashed = info["loss"], info["aux"]
+            coeffs = info["coeffs"]
+            if uplink == "seed_replay":
+                cp = Z.add_scaled(cp, g, -client_lr)
+            else:
+                cp, oc = client_opt.update(g, oc, cp)
         else:
             (loss, smashed), g = jax.value_and_grad(closs, has_aux=True)(cp)
-        cp, oc = client_opt.update(g, oc, cp)
-        return cp, oc, smashed, loss
+            coeffs = jnp.zeros((zo_cfg.n_pairs,))
+            cp, oc = client_opt.update(g, oc, cp)
+        return cp, oc, smashed, loss, coeffs
 
     def round_fn(state, round_batch, key):
         N, h = fed.n_clients, fed.h
@@ -315,19 +355,23 @@ def make_fed_round(api: ModelAPI, method: str, zo_cfg: Z.ZOConfig,
             return _fo_locked_round(api, method, fed, client_opt,
                                     server_opt, state, round_batch, key)
 
+        # one base key per client; local step m folds m on top and
+        # zo_gradient folds the pair index on top of that — the same
+        # (client, step, pair) stream seed_replay_aggregate re-derives.
+        client_keys = Z.fold_in_range(key, N)
+
         def step_m(carry, m):
             cps, ocs = carry
             batch_m = jax.tree.map(lambda x: jnp.take(x, m, axis=1),
                                    round_batch)
             keys = jax.vmap(
-                lambda i: jax.random.fold_in(
-                    jax.random.fold_in(key, m), i))(jnp.arange(N))
-            cps, ocs, smashed, losses = jax.vmap(
+                lambda ck: jax.random.fold_in(ck, m))(client_keys)
+            cps, ocs, smashed, losses, coeffs = jax.vmap(
                 local_update, in_axes=(0, 0, 0, 0))(cps, ocs, batch_m,
                                                     keys)
-            return (cps, ocs), (smashed, losses)
+            return (cps, ocs), (smashed, losses, coeffs)
 
-        (cps, _), (smashed_all, losses) = jax.lax.scan(
+        (cps, _), (smashed_all, losses, coeffs_all) = jax.lax.scan(
             step_m, (cp0, oc0), jnp.arange(h))
         # uploads every k local steps (static selection)
         upload_ms = [m for m in range(h) if m % fed.upload_every == 0]
@@ -363,10 +407,23 @@ def make_fed_round(api: ModelAPI, method: str, zo_cfg: Z.ZOConfig,
         # Fed-Server aggregation with participation / stragglers
         mask = AG.straggler_mask(jax.random.fold_in(key, 777), N,
                                  fed.participation, fed.straggler_prob)
-        new_client = AG.fedavg_masked(cps, mask, state["client"])
+        dense_bytes = N * param_bytes(state["client"])
+        if uplink == "seed_replay":
+            # (h, N, n_pairs) -> (N, h, n_pairs): the per-client message
+            coeffs_nhp = jnp.transpose(coeffs_all, (1, 0, 2))
+            new_client = AG.seed_replay_aggregate(
+                state["client"], client_keys, coeffs_nhp, client_lr,
+                zo_cfg, mask)
+            lean_bytes = seed_replay_uplink_bytes(N, h, zo_cfg.n_pairs)
+        else:
+            new_client = AG.fedavg_masked(cps, mask, state["client"])
+            lean_bytes = dense_bytes
         metrics = {"client_loss": jnp.mean(losses),
                    "server_loss": jnp.mean(jnp.stack(s_losses)),
-                   "participants": jnp.sum(mask)}
+                   "participants": jnp.sum(mask),
+                   "uplink_bytes": jnp.asarray(lean_bytes, jnp.float32),
+                   "uplink_bytes_dense": jnp.asarray(dense_bytes,
+                                                     jnp.float32)}
         return ({"client": new_client, "server": sp, "opt_server": os_},
                 metrics)
 
@@ -419,8 +476,12 @@ def _fo_locked_round(api, method, fed, client_opt, server_opt, state,
     mask = AG.straggler_mask(jax.random.fold_in(key, 777), N,
                              fed.participation, fed.straggler_prob)
     new_client = AG.fedavg_masked(cps, mask, state["client"])
+    dense_bytes = jnp.asarray(N * param_bytes(state["client"]),
+                              jnp.float32)
     metrics = {"client_loss": jnp.mean(losses),
                "server_loss": jnp.mean(losses),
-               "participants": jnp.sum(mask)}
+               "participants": jnp.sum(mask),
+               "uplink_bytes": dense_bytes,
+               "uplink_bytes_dense": dense_bytes}
     return ({"client": new_client, "server": sp, "opt_server": os_},
             metrics)

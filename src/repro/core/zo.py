@@ -86,6 +86,22 @@ def add_scaled(params, direction, scale):
         params, direction)
 
 
+def fold_in_range(key, n: int):
+    """Batched key derivation: stacked ``fold_in(key, i)`` for i < n.
+
+    One vmapped threefry dispatch instead of ``n`` sequential host-side
+    folds — the building block for scanning over perturbation pairs and
+    for the flattened (client, step, pair) seed-replay scan."""
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(n))
+
+
+def direction_like(key, tree, zo: "ZOConfig", shardings=None):
+    """The pair direction u for one folded key, per the configured scale."""
+    if zo.scale == "sphere":
+        return unit_sphere_like(key, tree, shardings)
+    return normal_like(key, tree, shardings)
+
+
 # ---------------------------------------------------------------------------
 # the two-point estimator
 # ---------------------------------------------------------------------------
@@ -104,20 +120,22 @@ def zo_gradient(loss_fn: Callable, params, key, zo: ZOConfig,
     """
     d = tree_size(params)
     l0, aux0 = loss_fn(params)
-    g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
-    coeffs = []
-    for p in range(zo.n_pairs):
-        kp = jax.random.fold_in(key, p)
-        u = (unit_sphere_like(kp, params, shardings)
-             if zo.scale == "sphere"
-             else normal_like(kp, params, shardings))
+    dim_factor = float(d) if zo.scale == "sphere" else 1.0
+    g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    if zo.n_pairs == 0:
+        return g0, {"loss": l0, "aux": aux0, "coeffs": jnp.zeros((0,))}
+
+    def pair_step(g, kp):
+        u = direction_like(kp, params, zo, shardings)
         lp, _ = loss_fn(add_scaled(params, u, zo.mu))
-        dim_factor = float(d) if zo.scale == "sphere" else 1.0
         coeff = dim_factor * (lp - l0) / zo.mu / zo.n_pairs
-        coeffs.append(coeff)
         g = jax.tree.map(lambda gl, ul: gl + coeff * ul, g, u)
-    info = {"loss": l0, "aux": aux0,
-            "coeffs": jnp.stack(coeffs) if coeffs else jnp.zeros((0,))}
+        return g, coeff
+
+    # scan over folded keys: n_pairs stays ONE jitted program (the old
+    # Python loop unrolled n_pairs copies of the forward pass into HLO).
+    g, coeffs = jax.lax.scan(pair_step, g0, fold_in_range(key, zo.n_pairs))
+    info = {"loss": l0, "aux": aux0, "coeffs": coeffs}
     return g, info
 
 
@@ -129,16 +147,30 @@ def zo_projected_coeffs(loss_fn: Callable, params, key, zo: ZOConfig):
     return info["coeffs"], info["loss"]
 
 
-def replay_update(params, key, coeffs, lr, zo: ZOConfig):
-    """Server-side (or on-device, streaming) reconstruction of the ZO
-    update from (key, coeffs): theta <- theta - lr * sum_p coeff_p u_p.
-    Regenerates each u from the seed; never stores the full direction
-    alongside more than one leaf at a time."""
+def replay_gradient(params, key, coeffs, zo: ZOConfig, shardings=None):
+    """Regenerate the materialized ZO gradient from its lean ``(key,
+    coeffs)`` uplink form: g = sum_p coeff_p u_p(key).  The scan body is
+    the same accumulation as :func:`zo_gradient` (minus the forward
+    passes), so the reconstruction is bit-exact."""
+    g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
     n = coeffs.shape[0]
-    out = params
-    for p in range(n):
-        kp = jax.random.fold_in(key, p)
-        u = (unit_sphere_like(kp, params) if zo.scale == "sphere"
-             else normal_like(kp, params))
-        out = add_scaled(out, u, -lr * coeffs[p])
-    return out
+    if n == 0:
+        return g0
+
+    def pair_step(g, kc):
+        kp, coeff = kc
+        u = direction_like(kp, params, zo, shardings)
+        g = jax.tree.map(lambda gl, ul: gl + coeff * ul, g, u)
+        return g, None
+
+    g, _ = jax.lax.scan(pair_step, g0, (fold_in_range(key, n), coeffs))
+    return g
+
+
+def replay_update(params, key, coeffs, lr, zo: ZOConfig, shardings=None):
+    """Server-side (or on-device, streaming) reconstruction of the ZO
+    SGD step from (key, coeffs): theta <- theta - lr * sum_p coeff_p u_p.
+    Regenerates each u from the seed inside a single jitted scan; the
+    full direction never persists beyond one scan iteration."""
+    g = replay_gradient(params, key, coeffs, zo, shardings)
+    return add_scaled(params, g, -lr)

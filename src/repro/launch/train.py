@@ -4,6 +4,11 @@ hybrid HERON step (or any baseline method) on real devices.
 Example (CPU, reduced config):
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --smoke \
       --steps 20 --batch 8 --seq 64 --ckpt-dir /tmp/ckpt
+
+Federated simulation with the lean seed-replay uplink (clients upload
+(seed, coeff) pairs — O(h*n_pairs) floats — instead of O(d) params):
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --smoke \
+      --fed --clients 4 --local-steps 2 --uplink seed_replay --steps 5
 """
 from __future__ import annotations
 
@@ -46,6 +51,42 @@ def build_batch(cfg, ds, key, batch, seq):
     return b
 
 
+def run_fed(args, cfg, api):
+    """N-client federated simulation rounds (make_fed_round) with the
+    dense or lean seed-replay uplink; reports per-round uplink bytes."""
+    from repro.data.pipeline import round_batches
+
+    if cfg.enc_dec or cfg.frontend is not None:
+        raise SystemExit("--fed supports decoder-only text archs")
+    copt = make_optimizer("zo_sgd" if args.method == "heron" else "adamw",
+                          args.lr_client)
+    sopt = make_optimizer("adamw", args.lr_server)
+    fed = P.FedConfig(n_clients=args.clients, h=args.local_steps,
+                      participation=args.participation)
+    round_fn = jax.jit(P.make_fed_round(
+        api, args.method, Z.ZOConfig(mu=args.zo_mu, n_pairs=args.zo_pairs),
+        fed, copt, sopt, uplink=args.uplink, client_lr=args.lr_client))
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    state = {"client": params["client"], "server": params["server"],
+             "opt_server": sopt.init(params["server"])}
+    ds = BigramLM(vocab=cfg.vocab, seq_len=args.seq, seed=0)
+    t0 = time.time()
+    for r in range(args.steps):
+        rb = round_batches(ds, jax.random.fold_in(jax.random.PRNGKey(5),
+                                                  r),
+                           args.clients, args.local_steps, args.batch)
+        state, m = round_fn(state, rb, jax.random.fold_in(
+            jax.random.PRNGKey(9), r))
+        print(f"[fed] round {r:3d} "
+              f"client_loss={float(m['client_loss']):.4f} "
+              f"server_loss={float(m['server_loss']):.4f} "
+              f"uplink={args.uplink} "
+              f"bytes/round={float(m['uplink_bytes']):.3g} "
+              f"(dense={float(m['uplink_bytes_dense']):.3g}) "
+              f"({time.time()-t0:.1f}s)")
+    return 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-1.5b", choices=list(ARCH_IDS))
@@ -62,6 +103,15 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--fed", action="store_true",
+                    help="paper-faithful N-client federated simulation "
+                         "(--steps counts rounds)")
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--local-steps", type=int, default=2)
+    ap.add_argument("--participation", type=float, default=1.0)
+    ap.add_argument("--uplink", default="dense", choices=list(P.UPLINKS),
+                    help="client->Fed-Server weight channel "
+                         "(seed_replay = lean (seed, coeff) uplink)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -69,6 +119,11 @@ def main(argv=None):
         else None
     rules = AxisRules(mesh=mesh, enable_fsdp=False)
     api = P.lm_api(cfg, rules)
+    if args.fed:
+        return run_fed(args, cfg, api)
+    if args.uplink != "dense":
+        raise SystemExit("--uplink seed_replay requires --fed (the lean "
+                         "uplink is a federated-round mechanism)")
     c_name = "zo_sgd" if args.method == "heron" else "adamw"
     copt = make_optimizer(
         c_name, warmup_cosine(args.lr_client, 5, args.steps))

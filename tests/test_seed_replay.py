@@ -1,0 +1,129 @@
+"""Seed-replay lean uplink: the scan-vectorized reconstruction matches
+the loop oracle, (key, coeffs) replay reproduces the materialized ZO
+step, masked clients contribute nothing, and the fed-round wiring's
+seed_replay mode matches the dense path (exact at h == 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregate as AG
+from repro.core import protocols as P
+from repro.core import zo as Z
+
+
+def make_params():
+    return {"w": jnp.ones((6, 3)), "b": {"c": jnp.linspace(-1.0, 1.0, 5)}}
+
+
+def quad_loss(params):
+    loss = 0.0
+    for i, l in enumerate(jax.tree.leaves(params)):
+        loss = loss + 0.5 * jnp.sum((l - 0.1 * (i + 1)) ** 2)
+    return loss, None
+
+
+def test_scan_aggregate_matches_loop_reference():
+    params = make_params()
+    n, h, pairs = 3, 2, 2
+    zo = Z.ZOConfig(mu=1e-3, n_pairs=pairs)
+    keys = Z.fold_in_range(jax.random.PRNGKey(42), n)
+    coeffs = jax.random.normal(jax.random.PRNGKey(1), (n, h, pairs))
+    mask = jnp.array([1.0, 0.0, 1.0])
+    fast = jax.jit(lambda c: AG.seed_replay_aggregate(
+        params, keys, c, 1e-2, zo, mask))(coeffs)
+    ref = AG.seed_replay_aggregate_reference(params, keys, coeffs, 1e-2,
+                                             zo, mask)
+    for a, b in zip(jax.tree.leaves(fast), jax.tree.leaves(ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_replay_update_reproduces_zo_sgd_step():
+    """theta - lr*g_hat == replay_update(theta, key, coeffs, lr): the
+    replay scan is the zo_gradient accumulation minus the forwards."""
+    params = make_params()
+    zo = Z.ZOConfig(mu=1e-4, n_pairs=3)
+    key = jax.random.PRNGKey(11)
+    g, info = Z.zo_gradient(quad_loss, params, key, zo)
+    lr = 1e-3
+    direct = Z.add_scaled(params, g, -lr)
+    replayed = Z.replay_update(params, key, info["coeffs"], lr, zo)
+    for a, b in zip(jax.tree.leaves(direct), jax.tree.leaves(replayed)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=0, atol=1e-7)
+
+
+def test_masked_clients_contribute_nothing():
+    params = make_params()
+    n, h, pairs = 3, 1, 2
+    zo = Z.ZOConfig(mu=1e-3, n_pairs=pairs)
+    keys = Z.fold_in_range(jax.random.PRNGKey(0), n)
+    coeffs = jax.random.normal(jax.random.PRNGKey(1), (n, h, pairs))
+    mask = jnp.array([1.0, 0.0, 1.0])
+    out = AG.seed_replay_aggregate(params, keys, coeffs, 1e-2, zo, mask)
+    # poisoning the masked-out client's coefficients changes nothing
+    poisoned = coeffs.at[1].set(1e6)
+    out_p = AG.seed_replay_aggregate(params, keys, poisoned, 1e-2, zo,
+                                     mask)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(out_p)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # ... but an unmasked client's coefficients do
+    out_u = AG.seed_replay_aggregate(params, keys,
+                                     coeffs.at[0].set(1e6), 1e-2, zo,
+                                     mask)
+    assert any(float(jnp.max(jnp.abs(a - b))) > 1e-3
+               for a, b in zip(jax.tree.leaves(out),
+                               jax.tree.leaves(out_u)))
+
+
+def _cnn_round_setup():
+    from repro.data.pipeline import round_batches
+    from repro.data.synthetic import GaussianMixtureImages
+    from repro.models import cnn as CNN
+    from repro.optim.optimizers import make_optimizer
+
+    cfg = CNN.CNNConfig(widths=(8, 16), blocks_per_stage=1, classes=4,
+                        client_blocks=1)
+    ds = GaussianMixtureImages(classes=4, hw=8, noise=0.5)
+    api = P.cnn_api(cfg)
+    params = CNN.init_cnn(jax.random.PRNGKey(0), cfg)
+    sopt = make_optimizer("adamw", 2e-3)
+    state = {"client": params["client"], "server": params["server"],
+             "opt_server": sopt.init(params["server"])}
+    return api, state, sopt, round_batches, ds, make_optimizer
+
+
+def test_fed_round_seed_replay_matches_dense_at_h1():
+    api, state, sopt, round_batches, ds, make_optimizer = \
+        _cnn_round_setup()
+    lr = 2e-2
+    zo = Z.ZOConfig(mu=1e-3, n_pairs=2)
+    fed = P.FedConfig(n_clients=3, h=1)
+    rb = round_batches(ds, jax.random.PRNGKey(3), 3, 1, 16)
+    copt = make_optimizer("zo_sgd", lr)
+    dense = jax.jit(P.make_fed_round(api, "heron", zo, fed, copt, sopt))
+    lean = jax.jit(P.make_fed_round(api, "heron", zo, fed, copt, sopt,
+                                    uplink="seed_replay", client_lr=lr))
+    sd, md = dense(state, rb, jax.random.PRNGKey(9))
+    sl, ml = lean(state, rb, jax.random.PRNGKey(9))
+    for a, b in zip(jax.tree.leaves(sd["client"]),
+                    jax.tree.leaves(sl["client"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=1e-6)
+    # the O(d) -> O(h*n_pairs) reduction is visible in the metrics
+    assert float(ml["uplink_bytes"]) < float(ml["uplink_bytes_dense"])
+    assert float(md["uplink_bytes"]) == float(md["uplink_bytes_dense"])
+
+
+def test_fed_round_seed_replay_validation():
+    api, state, sopt, _, _, make_optimizer = _cnn_round_setup()
+    zo = Z.ZOConfig(mu=1e-3, n_pairs=1)
+    fed = P.FedConfig(n_clients=2, h=1)
+    copt = make_optimizer("adamw", 1e-3)
+    with pytest.raises(ValueError, match="heron"):
+        P.make_fed_round(api, "cse_fsl", zo, fed, copt, sopt,
+                         uplink="seed_replay", client_lr=1e-2)
+    with pytest.raises(ValueError, match="client_lr"):
+        P.make_fed_round(api, "heron", zo, fed, copt, sopt,
+                         uplink="seed_replay")
