@@ -16,11 +16,16 @@ Prints ``name,us_per_call,derived`` CSV rows.
              end-to-end federated round in both uplink modes.
   kernels  — wall-clock of the XLA hot paths + Pallas interpret sanity.
 
+Each bench also writes a machine-readable ``benchmarks/BENCH_<name>.json``
+(rows + git rev + backend) for CI artifacts and cross-revision diffs.
+
 Run all:          PYTHONPATH=src python benchmarks/run.py
 Run a subset:     PYTHONPATH=src python benchmarks/run.py seed_replay
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -79,17 +84,28 @@ def _client_update_costs(method):
     from repro.models import cnn as CNN
     from repro.optim.optimizers import make_optimizer
 
+    zo_method = method in ("heron", "heron_kernel")
     cfg = CNN.CNNConfig(widths=(16, 32), blocks_per_stage=1, classes=10,
-                        client_blocks=1)
+                        client_blocks=1,
+                        forward_impl=("kernel" if method == "heron_kernel"
+                                      else "xla"))
     params = CNN.init_cnn(jax.random.PRNGKey(0), cfg)
     api = P.cnn_api(cfg)
-    opt = make_optimizer("zo_sgd" if method == "heron" else "adamw", 1e-3)
+    opt = make_optimizer("zo_sgd" if zo_method else "adamw", 1e-3)
     x = jax.random.normal(jax.random.PRNGKey(1), (32, 16, 16, 3))
     y = jax.random.randint(jax.random.PRNGKey(2), (32,), 0, 10)
     batch = {"inputs": x, "labels": y}
     oc = opt.init(params["client"])
 
-    if method == "heron":
+    if method == "heron_kernel":
+        def update(cp, oc):
+            g, info = Z.zo_gradient_kernel(
+                lambda p, seeds, mu: api.client_dual_loss(p, batch, seeds,
+                                                          mu),
+                cp, jnp.int32(3), Z.ZOConfig(mu=1e-3, n_pairs=1))
+            cp, oc = opt.update(g, oc, cp)
+            return cp, oc
+    elif method == "heron":
         def update(cp, oc):
             g, info = Z.zo_gradient(
                 lambda p: api.client_loss(p, batch), cp,
@@ -114,15 +130,21 @@ def _client_update_costs(method):
 def bench_table2():
     base = None
     stats = {}
-    for m in ("sflv2", "cse_fsl", "heron"):
+    for m in ("sflv2", "cse_fsl", "heron", "heron_kernel"):
         us, fl, mem = _client_update_costs(m)
-        stats[m] = (fl, mem)
+        stats[m] = (us, fl, mem)
         row(f"table2/resnet_client_update/{m}", us,
             f"flops={fl:.3g} temp_mem={mem}")
     row("table2/heron_vs_cse_flops_ratio", 0.0,
-        f"{stats['heron'][0] / stats['cse_fsl'][0]:.3f} (paper: ~0.67)")
+        f"{stats['heron'][1] / stats['cse_fsl'][1]:.3f} (paper: ~0.67)")
     row("table2/heron_vs_cse_mem_ratio", 0.0,
-        f"{stats['heron'][1] / stats['cse_fsl'][1]:.3f} (paper: ~0.36)")
+        f"{stats['heron'][2] / stats['cse_fsl'][2]:.3f} (paper: ~0.36)")
+    # flops/mem of the kernel path are interpret-mode artifacts off-TPU
+    # (the grid loop unrolls into HLO), so compare wall clock only
+    row("table2/heron_kernel_vs_heron_time_ratio", 0.0,
+        f"{stats['heron_kernel'][0] / stats['heron'][0]:.3f} "
+        "(interpret-mode CPU proxy; fused dual probe halves W reads on "
+        "TPU)")
 
 
 # ---------------------------------------------------------------------------
@@ -152,6 +174,17 @@ def bench_table3():
             jax.random.PRNGKey(3), Z.ZOConfig(mu=1e-3, n_pairs=1))
         return g
 
+    import dataclasses
+    api_k = P.lm_api(dataclasses.replace(cfg, forward_impl="kernel"),
+                     rules)
+
+    def heron_kernel_update(tc):
+        g, _ = Z.zo_gradient_kernel(
+            lambda t, seeds, mu: api_k.client_dual_loss(
+                combine(t, fc), batch, seeds, mu),
+            tc, jnp.int32(3), Z.ZOConfig(mu=1e-3, n_pairs=1))
+        return g
+
     def fo_update(tc):
         (_, _), g = jax.value_and_grad(
             lambda t: api.client_loss(combine(t, fc), batch),
@@ -160,6 +193,7 @@ def bench_table3():
 
     stats = {}
     for name, fn in (("heron", heron_update),
+                     ("heron_kernel", heron_kernel_update),
                      ("splitlora_fo", fo_update)):
         jitted = jax.jit(fn)
         us, _ = timeit(jitted, tc, n=3)
@@ -175,6 +209,9 @@ def bench_table3():
         "(paper: ~0.56-0.67)")
     row("table3/heron_vs_fo_mem_ratio", 0.0,
         f"{stats['heron'][1] / stats['splitlora_fo'][1]:.3f}")
+    row("table3/heron_kernel_vs_heron_flops_ratio", 0.0,
+        f"{stats['heron_kernel'][0] / stats['heron'][0]:.3f} "
+        "(fused dual probe: 2 losses per weight read)")
 
 
 # ---------------------------------------------------------------------------
@@ -378,6 +415,22 @@ def bench_kernels():
     jax.block_until_ready(ops.zo_matmul(x, w, 7, 1e-3, bm=128))
     row("kernels/zo_matmul_interpret", (time.perf_counter() - t0) * 1e6,
         "pallas_interpret_smoke")
+    # fused dual probe (clean + perturbed in one pass over W) vs two
+    # separate zo_matmul passes.  Interpret wall clock is the CPU proxy;
+    # on TPU the fused kernel additionally halves the HBM reads of W.
+    fused = jax.jit(lambda x, w: ops.zo_dual_forward(x, w, 7, 1e-3,
+                                                     impl="interpret"))
+    split = jax.jit(lambda x, w: ops.zo_dual_forward_split(
+        x, w, 7, 1e-3, interpret=True))
+    us_f, _ = timeit(fused, x, w, n=3)
+    us_s, _ = timeit(split, x, w, n=3)
+    row("kernels/zo_dual_fused_interpret", us_f, "one pass over W")
+    row("kernels/zo_dual_split_interpret", us_s,
+        f"split_over_fused={us_s / us_f:.2f}")
+    emul = jax.jit(lambda x, w: ops.zo_dual_forward(x, w, 7, 1e-3,
+                                                    impl="xla"))
+    us_e, _ = timeit(emul, x, w, n=3)
+    row("kernels/zo_dual_xla_emulation", us_e, "bit-exact jnp fallback")
     a = jax.random.uniform(jax.random.PRNGKey(5), (2, 256, 64),
                            minval=0.5, maxval=0.99)
     b = jax.random.normal(jax.random.PRNGKey(6), (2, 256, 64))
@@ -395,6 +448,32 @@ BENCHES = {
 }
 
 
+def _git_rev() -> str:
+    import subprocess
+    try:
+        return subprocess.check_output(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            stderr=subprocess.DEVNULL).decode().strip()
+    except Exception:  # pragma: no cover
+        return "unknown"
+
+
+def _write_json(name: str, rows) -> None:
+    """Machine-readable mirror of the CSV rows: BENCH_<name>.json next to
+    this script, so CI can diff runs across revisions."""
+    out = {"name": name, "git_rev": _git_rev(),
+           "backend": jax.default_backend(),
+           "rows": [{"name": n, "us": u, "derived": d}
+                    for n, u, d in rows]}
+    path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+        f.write("\n")
+    print(f"# wrote {path}", flush=True)
+
+
 def main(argv=None) -> None:
     import sys
     names = list(argv if argv is not None else sys.argv[1:]) or \
@@ -407,10 +486,12 @@ def main(argv=None) -> None:
     for name in names:
         fn = BENCHES[name]
         t0 = time.time()
+        start = len(ROWS)
         try:
             fn()
         except Exception as e:  # pragma: no cover
             row(f"{fn.__name__}/ERROR", 0.0, repr(e)[:120])
+        _write_json(name, ROWS[start:])
         print(f"# {fn.__name__} done in {time.time()-t0:.1f}s",
               flush=True)
 

@@ -59,7 +59,9 @@ def all_steps(ckpt_dir: str):
         if d.startswith("step_") and os.path.exists(
                 os.path.join(ckpt_dir, d, "manifest.json")):
             out.append(int(d[5:]))
-    return out
+    # os.listdir order is filesystem-dependent; keep-k GC and
+    # latest_step both rely on ascending step order
+    return sorted(out)
 
 
 def latest_step(ckpt_dir: str):

@@ -7,6 +7,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import zo as Z
+from repro.kernels import ops as O
 
 
 def fedavg(stacked_params, weights=None):
@@ -109,6 +110,49 @@ def seed_replay_aggregate(global_params, client_keys, client_coeffs,
     acc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
                         global_params)
     acc, _ = jax.lax.scan(replay_one, acc0, (keys, scales))
+    return jax.tree.map(
+        lambda p, a: (p.astype(jnp.float32) + a).astype(p.dtype),
+        global_params, acc)
+
+
+def seed_replay_aggregate_kernel(global_params, client_seeds, client_coeffs,
+                                 lr: float, mask=None, seed_pred=None):
+    """Seed-replay aggregation for the kernel noise stream.
+
+    Same flattened (client, step, pair) scan as
+    :func:`seed_replay_aggregate`, but the replay directions come from
+    the per-layer hash stream the client's fused dual-probe forward
+    generated in-kernel: client_seeds is an (N,) int32 vector and the
+    pair seed is ``fold_seed(fold_seed(client_seeds[i], m), p)`` —
+    ``fold_seed`` is elementwise, so all N·h·n_pairs seeds derive in two
+    vectorized mixes with no threefry dispatches at all.  Because the
+    hash noise is backend-invariant, the server regenerates bit-identical
+    directions to what the clients' kernels applied.
+    """
+    n, h, n_pairs = client_coeffs.shape
+    if mask is None:
+        mask = jnp.ones((n,), jnp.float32)
+    tot = jnp.maximum(jnp.sum(mask), 1.0)
+
+    flat = jnp.arange(n * h * n_pairs)
+    i_idx = flat // (h * n_pairs)
+    m_idx = (flat // n_pairs) % h
+    p_idx = flat % n_pairs
+    seeds = O.fold_seed(O.fold_seed(
+        jnp.asarray(client_seeds, jnp.int32)[i_idx], m_idx), p_idx)
+    scales = (-lr * client_coeffs.reshape(-1)
+              * mask[i_idx] / tot).astype(jnp.float32)
+
+    def replay_one(acc, seed_scale):
+        sp, s = seed_scale
+        u = O.kernel_direction_tree(
+            global_params, O.leaf_seed_tree(global_params, sp, seed_pred))
+        acc = jax.tree.map(lambda a, ul: a + s * ul, acc, u)
+        return acc, None
+
+    acc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                        global_params)
+    acc, _ = jax.lax.scan(replay_one, acc0, (seeds, scales))
     return jax.tree.map(
         lambda p, a: (p.astype(jnp.float32) + a).astype(p.dtype),
         global_params, acc)

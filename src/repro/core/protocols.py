@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from repro.core import aggregate as AG
 from repro.core import zo as Z
 from repro.core.split import combine, param_bytes, partition
+from repro.kernels import ops as O
 from repro.distributed.sharding import AxisRules
 from repro.models import cnn as CNN
 from repro.models import transformer as T
@@ -40,6 +41,22 @@ class ModelAPI:
     aux_loss: Callable      # (client_params, smashed, batch) -> loss
     server_loss: Callable   # (server_params, client_const, smashed, batch) -> loss
     joint_loss: Callable    # (client_params, server_params, batch) -> loss
+    # kernel-backed fused dual probe (forward_impl="kernel"):
+    # (client_params, batch, seeds_tree, mu) -> (l_clean, l_pert, smashed)
+    # — both ZO losses of one pair from a single dual-batch forward.
+    client_dual_loss: Callable | None = None
+
+
+def _forward_impl_of(cfg) -> str | None:
+    """Resolve a model config's forward_impl knob to a matmul backend
+    (None = the classic XLA/threefry path, no dual-probe kernels)."""
+    fi = getattr(cfg, "forward_impl", "xla")
+    if fi == "kernel":
+        return O.default_forward_impl()
+    if fi == "kernel_interpret":
+        return "interpret"
+    assert fi == "xla", fi
+    return None
 
 
 def lm_api(cfg: ModelConfig, rules: AxisRules) -> ModelAPI:
@@ -74,7 +91,24 @@ def lm_api(cfg: ModelConfig, rules: AxisRules) -> ModelAPI:
             dec_positions=batch.get("dec_positions"))
         return T.lm_loss(logits, batch["labels"], cfg.vocab)
 
-    return ModelAPI(client_loss, aux_loss, server_loss, joint_loss)
+    client_dual_loss = None
+    impl = _forward_impl_of(cfg)
+    if impl is not None:
+        def client_dual_loss(cp, batch, seeds, mu):
+            pz = O.Perturb(seeds=seeds, mu=mu, dual=True, impl=impl)
+            pos = batch.get("positions")
+            s2, _ = T.client_forward(cp, cfg, rules, batch["inputs"], pos,
+                                     perturb=pz)
+            pos2 = None if pos is None else jnp.concatenate([pos, pos], 0)
+            logits2 = T.aux_forward(cp, cfg, rules, s2, pos2, perturb=pz)
+            lbl = batch.get("aux_labels", batch["labels"])
+            B = batch["inputs"].shape[0]
+            l0 = T.lm_loss(logits2[:B], lbl, cfg.vocab)
+            lp = T.lm_loss(logits2[B:], lbl, cfg.vocab)
+            return l0, lp, s2[:B]
+
+    return ModelAPI(client_loss, aux_loss, server_loss, joint_loss,
+                    client_dual_loss)
 
 
 def cnn_api(cfg: CNN.CNNConfig) -> ModelAPI:
@@ -93,7 +127,20 @@ def cnn_api(cfg: CNN.CNNConfig) -> ModelAPI:
         s = CNN.client_forward(cp, batch["inputs"], cfg)
         return CNN.xent(CNN.server_logits(sp, s, cfg), batch["labels"])
 
-    return ModelAPI(client_loss, aux_loss, server_loss, joint_loss)
+    client_dual_loss = None
+    impl = _forward_impl_of(cfg)
+    if impl is not None:
+        def client_dual_loss(cp, batch, seeds, mu):
+            pz = O.Perturb(seeds=seeds, mu=mu, dual=True, impl=impl)
+            s2 = CNN.client_forward(cp, batch["inputs"], cfg, pz)
+            logits2 = CNN.aux_logits(cp, s2, cfg, pz)
+            B = batch["inputs"].shape[0]
+            l0 = CNN.xent(logits2[:B], batch["labels"])
+            lp = CNN.xent(logits2[B:], batch["labels"])
+            return l0, lp, s2[:B]
+
+    return ModelAPI(client_loss, aux_loss, server_loss, joint_loss,
+                    client_dual_loss)
 
 
 # ===========================================================================
@@ -150,8 +197,20 @@ def make_train_step(api: ModelAPI, method: str, zo_cfg: Z.ZOConfig,
 
             if method == "heron":
                 # --- the paper's technique: forward-only ZO client ---
-                g_c, info = Z.zo_gradient(closs, tc, key, zo_cfg,
-                                          shardings=client_shardings)
+                if api.client_dual_loss is not None:
+                    # kernel noise stream: per-layer hash seeds, fused
+                    # dual-probe forward (both losses per weight read)
+                    base_seed = Z.seed_from_key(key)
+
+                    def dloss(tcx, seeds, mu):
+                        return api.client_dual_loss(combine(tcx, fc),
+                                                    batch, seeds, mu)
+
+                    g_c, info = Z.zo_gradient_kernel(dloss, tc, base_seed,
+                                                     zo_cfg)
+                else:
+                    g_c, info = Z.zo_gradient(closs, tc, key, zo_cfg,
+                                              shardings=client_shardings)
                 c_loss, smashed = info["loss"], info["aux"]
                 metrics["zo_coeff_abs"] = jnp.mean(
                     jnp.abs(info["coeffs"]))
@@ -325,13 +384,24 @@ def make_fed_round(api: ModelAPI, method: str, zo_cfg: Z.ZOConfig,
         if client_lr is None:
             raise ValueError("seed_replay uplink needs client_lr: the "
                              "Fed-Server replays plain-SGD local steps")
+    # kernel noise stream: clients run the fused dual-probe forward and
+    # the whole (client, step, pair) seed chain is int32 fold_seed hashes
+    # instead of threefry keys — the Fed-Server replays it bit-identically
+    # with seed_replay_aggregate_kernel.
+    kernel_client = api.client_dual_loss is not None and method == "heron"
 
     def local_update(cp, oc, batch, key):
         def closs(cpx):
             return api.client_loss(cpx, batch)
 
         if method == "heron":
-            g, info = Z.zo_gradient(closs, cp, key, zo_cfg)
+            if kernel_client:
+                def dloss(cpx, seeds, mu):
+                    return api.client_dual_loss(cpx, batch, seeds, mu)
+
+                g, info = Z.zo_gradient_kernel(dloss, cp, key, zo_cfg)
+            else:
+                g, info = Z.zo_gradient(closs, cp, key, zo_cfg)
             loss, smashed = info["loss"], info["aux"]
             coeffs = info["coeffs"]
             if uplink == "seed_replay":
@@ -358,14 +428,20 @@ def make_fed_round(api: ModelAPI, method: str, zo_cfg: Z.ZOConfig,
         # one base key per client; local step m folds m on top and
         # zo_gradient folds the pair index on top of that — the same
         # (client, step, pair) stream seed_replay_aggregate re-derives.
-        client_keys = Z.fold_in_range(key, N)
+        if kernel_client:
+            client_keys = O.fold_seed(Z.seed_from_key(key), jnp.arange(N))
+        else:
+            client_keys = Z.fold_in_range(key, N)
 
         def step_m(carry, m):
             cps, ocs = carry
             batch_m = jax.tree.map(lambda x: jnp.take(x, m, axis=1),
                                    round_batch)
-            keys = jax.vmap(
-                lambda ck: jax.random.fold_in(ck, m))(client_keys)
+            if kernel_client:
+                keys = O.fold_seed(client_keys, m)
+            else:
+                keys = jax.vmap(
+                    lambda ck: jax.random.fold_in(ck, m))(client_keys)
             cps, ocs, smashed, losses, coeffs = jax.vmap(
                 local_update, in_axes=(0, 0, 0, 0))(cps, ocs, batch_m,
                                                     keys)
@@ -411,9 +487,14 @@ def make_fed_round(api: ModelAPI, method: str, zo_cfg: Z.ZOConfig,
         if uplink == "seed_replay":
             # (h, N, n_pairs) -> (N, h, n_pairs): the per-client message
             coeffs_nhp = jnp.transpose(coeffs_all, (1, 0, 2))
-            new_client = AG.seed_replay_aggregate(
-                state["client"], client_keys, coeffs_nhp, client_lr,
-                zo_cfg, mask)
+            if kernel_client:
+                new_client = AG.seed_replay_aggregate_kernel(
+                    state["client"], client_keys, coeffs_nhp, client_lr,
+                    mask)
+            else:
+                new_client = AG.seed_replay_aggregate(
+                    state["client"], client_keys, coeffs_nhp, client_lr,
+                    zo_cfg, mask)
             lean_bytes = seed_replay_uplink_bytes(N, h, zo_cfg.n_pairs)
         else:
             new_client = AG.fedavg_masked(cps, mask, state["client"])

@@ -28,6 +28,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import ops as O
+
 
 @dataclasses.dataclass(frozen=True)
 class ZOConfig:
@@ -164,6 +166,94 @@ def replay_gradient(params, key, coeffs, zo: ZOConfig, shardings=None):
         return g, None
 
     g, _ = jax.lax.scan(pair_step, g0, (fold_in_range(key, n), coeffs))
+    return g
+
+
+# ---------------------------------------------------------------------------
+# kernel-stream estimator (fused dual probe + per-layer hash seeds)
+# ---------------------------------------------------------------------------
+#
+# The jax.random path above materializes each direction leaf-by-leaf with
+# threefry.  The kernel path instead derives one int32 seed per parameter
+# leaf (base_seed + path hash, see kernels.ops.leaf_seed_tree) and lets
+# the model's forward generate the perturbation *inside* the matmul
+# kernels (kernels.zo_matmul).  Both loss evaluations of the two-point
+# estimator come out of ONE fused dual-probe pass, so each pair costs a
+# single read of the weights.  The noise is unit-variance uniform
+# (iid per entry), i.e. the gaussian-type estimator contract:
+# dim_factor == 1 and coeff = (l_pert - l_clean) / mu / n_pairs, exactly
+# as the scale="gaussian" branch of zo_gradient.
+
+def seed_from_key(key):
+    """Stable int32 base seed from a PRNG key (typed or raw uint32)."""
+    kd = key
+    try:
+        if jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
+            kd = jax.random.key_data(key)
+    except TypeError:
+        pass
+    kd = jnp.reshape(kd, (-1,)).astype(jnp.uint32)
+    return (kd[0] ^ kd[-1]).astype(jnp.int32)
+
+
+def pair_seeds(base_seed, n_pairs: int):
+    """The per-pair seed stream: fold_seed(base, p) for p < n_pairs."""
+    return O.fold_seed(base_seed, jnp.arange(max(n_pairs, 1)))
+
+
+def zo_gradient_kernel(dual_loss_fn, params, base_seed, zo: ZOConfig,
+                       seed_pred=None):
+    """Two-point ZO gradient with the fused kernel noise stream.
+
+    ``dual_loss_fn(params, seeds_tree, mu) -> (l_clean, l_pert, aux)``
+    must evaluate BOTH losses of the pair — the model's dual-probe
+    forward does this in one pass per layer.  ``params`` may contain
+    None placeholders (frozen leaves from ``partition``); their seeds
+    are None and they are never perturbed.  Returns (grad_tree, info)
+    with the same contract as :func:`zo_gradient` (coeffs are the
+    lean-uplink scalars; see :func:`replay_gradient_kernel`).
+    """
+    g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    if zo.n_pairs == 0:
+        seeds = O.leaf_seed_tree(params, base_seed, seed_pred)
+        l0, _, aux = dual_loss_fn(params, seeds, zo.mu)
+        return g0, {"loss": l0, "aux": aux, "coeffs": jnp.zeros((0,))}
+
+    def pair_step(g, sp):
+        seeds = O.leaf_seed_tree(params, sp, seed_pred)
+        l0, lp, aux = dual_loss_fn(params, seeds, zo.mu)
+        coeff = (lp - l0) / zo.mu / zo.n_pairs
+        u = O.kernel_direction_tree(params, seeds)
+        g = jax.tree.map(lambda gl, ul: gl + coeff * ul, g, u)
+        return g, (coeff, l0, aux)
+
+    g, (coeffs, l0s, auxs) = jax.lax.scan(
+        pair_step, g0, pair_seeds(base_seed, zo.n_pairs))
+    info = {"loss": l0s[-1],
+            "aux": jax.tree.map(lambda a: a[-1], auxs),
+            "coeffs": coeffs}
+    return g, info
+
+
+def replay_gradient_kernel(params, base_seed, coeffs, seed_pred=None):
+    """Regenerate the kernel-stream ZO gradient from its lean
+    ``(base_seed, coeffs)`` uplink form.  Same accumulation order as
+    :func:`zo_gradient_kernel` minus the forward passes; the regenerated
+    directions are bit-identical (hash noise is backend-invariant) and
+    the accumulated gradient matches to f32 fusion rounding."""
+    g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    n = coeffs.shape[0]
+    if n == 0:
+        return g0
+
+    def pair_step(g, sc):
+        sp, coeff = sc
+        u = O.kernel_direction_tree(
+            params, O.leaf_seed_tree(params, sp, seed_pred))
+        g = jax.tree.map(lambda gl, ul: gl + coeff * ul, g, u)
+        return g, None
+
+    g, _ = jax.lax.scan(pair_step, g0, (pair_seeds(base_seed, n), coeffs))
     return g
 
 

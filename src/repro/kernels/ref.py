@@ -15,6 +15,14 @@ def matmul_ref(x, w):
     return (x.astype(jnp.float32) @ w.astype(jnp.float32)).astype(x.dtype)
 
 
+def zo_dual_matmul_ref(xa, xb, w, u, mu_a, mu_b, *, perturb_a=False,
+                       perturb_b=True):
+    """Dual probe with U materialized: one branch per (x, mu) pair."""
+    ya = zo_matmul_ref(xa, w, u, mu_a) if perturb_a else matmul_ref(xa, w)
+    yb = zo_matmul_ref(xb, w, u, mu_b) if perturb_b else matmul_ref(xb, w)
+    return ya, yb
+
+
 def flash_attention_ref(q, k, v, *, causal=True, window=0, cap=0.0,
                         scale=None):
     """Naive full-score attention with GQA/local/softcap semantics."""

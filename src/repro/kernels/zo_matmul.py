@@ -1,21 +1,36 @@
-"""Pallas TPU kernel: fused ZO-perturbed matmul  y = x @ (W + mu * U(seed)).
+"""Pallas TPU kernels: fused ZO-perturbed matmul  y = x @ (W + mu * U(seed))
+and the fused dual probe  (ya, yb) = (x_a @ (W + mu_a*U), x_b @ (W + mu_b*U)).
 
 The TPU-native adaptation of the paper's lean-client mechanism (DESIGN.md
-§3): the perturbation U is generated *tile-by-tile in VMEM* from the
-on-core PRNG (`pltpu.prng_seed` / `prng_random_bits`) while the tile is
-being fed to the MXU — U never exists in HBM, so the perturbed forward
-pass costs exactly the HBM traffic of an ordinary matmul.  Regenerating
-U from the same seed reproduces the same direction (seed-replay).
+§3): the perturbation U is generated *tile-by-tile in VMEM* from a
+counter-based hash while the tile is being fed to the MXU — U never
+exists in HBM, so the perturbed forward pass costs exactly the HBM
+traffic of an ordinary matmul.  The dual-probe kernel goes one step
+further: both loss evaluations of the two-point estimator (clean +
+perturbed, or the +mu/-mu antithetic pair) share a single read of each W
+tile and a single noise generation, so the estimator costs ONE weight
+read instead of two.
 
 U entries are uniform(-sqrt(3), +sqrt(3)) (unit variance); the paper's
-estimator admits uniform-ball perturbations, and a uniform tile is one
-multiply-add from raw PRNG bits, keeping the generator off the critical
-MXU path.  Bits come from a counter-based murmur3-style hash of
-(seed, tile, lane) — stateless, so it runs identically in interpret
-mode (CPU validation) and compiled on TPU; ``use_hw_prng=True`` switches
-to the hardware PRNG (`pltpu.prng_random_bits`) on real TPUs.
+estimator admits uniform perturbations, and a uniform tile is one
+multiply-add from raw hash bits, keeping the generator off the critical
+MXU path.
 
-Grid: (nm, nn, nk) with the k loop innermost; an f32 VMEM scratch
+The noise stream is addressed by GLOBAL (row, col) coordinates of the
+weight matrix mixed with the seed — NOT by tile indices — so it is
+invariant to the block sizes bm/bn/bk, identical between compiled TPU
+and ``interpret=True`` CPU execution, and bit-exactly reproducible by
+the pure-jnp :func:`uniform_noise` below.  That last property is what
+makes server-side seed-replay possible: ``replay_gradient`` /
+``seed_replay_aggregate`` regenerate the exact kernel directions from
+``(seed, shape)`` without ever running the kernel.
+
+``row_offset`` shifts the global row coordinate: a layer stacked along a
+leading scan axis (reps, K, N) treats rep r as rows [r*K, (r+1)*K) of
+one canonical (reps*K, N) noise field, so sliced-per-rep kernel calls
+and whole-leaf replay see the same stream.
+
+Grid: (nm, nn, nk) with the k loop innermost; f32 VMEM scratch
 accumulates partial products across k steps (TPU grid iteration is
 sequential, so scratch carries state).
 """
@@ -31,17 +46,10 @@ from jax.experimental.pallas import tpu as pltpu
 SQRT3 = 1.7320508075688772
 
 
-def _tile_seed(base_seed, ki, ni, nk):
-    # unique per (k, n) tile of W; independent of the m (row) block
-    return base_seed + (ni * nk + ki) * 1000003
-
-
-def _hash_bits(tile_seed, shape):
-    """Counter-based stateless RNG (murmur3 finalizer over lane ids)."""
-    r = jax.lax.broadcasted_iota(jnp.uint32, shape, 0)
-    c = jax.lax.broadcasted_iota(jnp.uint32, shape, 1)
-    x = (r * jnp.uint32(0x9E3779B9)) ^ (c * jnp.uint32(0x85EBCA6B))
-    x = x ^ tile_seed.astype(jnp.uint32)
+def _mix_bits(seed_u32, r_u32, c_u32):
+    """murmur3-style finalizer over (seed, global row, global col)."""
+    x = (r_u32 * jnp.uint32(0x9E3779B9)) ^ (c_u32 * jnp.uint32(0x85EBCA6B))
+    x = x ^ (seed_u32 * jnp.uint32(0x27D4EB2F) + jnp.uint32(0x165667B1))
     x = x ^ (x >> 16)
     x = x * jnp.uint32(0x85EBCA6B)
     x = x ^ (x >> 13)
@@ -50,18 +58,46 @@ def _hash_bits(tile_seed, shape):
     return x
 
 
-def _uniform_tile(tile_seed, shape, use_hw_prng: bool = False):
-    if use_hw_prng:
-        pltpu.prng_seed(tile_seed)
-        bits = pltpu.prng_random_bits(shape).astype(jnp.uint32)
-    else:
-        bits = _hash_bits(tile_seed, shape)
+def _bits_to_uniform(bits):
     u01 = bits.astype(jnp.float32) * (1.0 / 4294967296.0)
     return (u01 * 2.0 - 1.0) * SQRT3
 
 
-def _zo_matmul_kernel(seed_ref, mu_ref, x_ref, w_ref, o_ref, acc_ref, *,
-                      nk: int, gen_noise: bool, use_hw_prng: bool = False):
+def uniform_noise(seed, shape, row_offset=0, col_offset=0):
+    """U(seed) for a (rows, cols) window at a global offset — unit-variance
+    uniform(-sqrt3, sqrt3), f32.
+
+    Pure jnp and elementwise in the global coordinates, so the same
+    function is the in-kernel tile generator (with offsets derived from
+    the grid position) AND the server-side replay oracle (whole leaf at
+    offset 0).  ``seed``/offsets may be traced int32.
+    """
+    rows, cols = shape
+    r = jax.lax.broadcasted_iota(jnp.uint32, (rows, cols), 0) \
+        + jnp.asarray(row_offset).astype(jnp.uint32)
+    c = jax.lax.broadcasted_iota(jnp.uint32, (rows, cols), 1) \
+        + jnp.asarray(col_offset).astype(jnp.uint32)
+    return _bits_to_uniform(_mix_bits(jnp.asarray(seed).astype(jnp.uint32),
+                                      r, c))
+
+
+def uniform_noise_at(seed, rows, cols):
+    """Gathered noise entries U[rows, cols] (broadcasting int arrays) —
+    the embedding-lookup form: noise for table row ids without
+    materializing the (vocab, d) field."""
+    r = jnp.asarray(rows).astype(jnp.uint32)
+    c = jnp.asarray(cols).astype(jnp.uint32)
+    return _bits_to_uniform(_mix_bits(jnp.asarray(seed).astype(jnp.uint32),
+                                      r, c))
+
+
+# ---------------------------------------------------------------------------
+# single-probe kernel: y = x @ (W + mu*U)
+# ---------------------------------------------------------------------------
+
+def _zo_matmul_kernel(seed_ref, mu_ref, off_ref, x_ref, w_ref, o_ref,
+                      acc_ref, *, nk: int, bk: int, bn: int,
+                      gen_noise: bool):
     ki = pl.program_id(2)
     ni = pl.program_id(1)
 
@@ -71,8 +107,9 @@ def _zo_matmul_kernel(seed_ref, mu_ref, x_ref, w_ref, o_ref, acc_ref, *,
 
     w = w_ref[...].astype(jnp.float32)
     if gen_noise:
-        u = _uniform_tile(_tile_seed(seed_ref[0], ki, ni, nk),
-                          w_ref.shape, use_hw_prng)
+        u = uniform_noise(seed_ref[0], (bk, bn),
+                          row_offset=off_ref[0] + ki * bk,
+                          col_offset=ni * bn)
         w = w + mu_ref[0] * u
     acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32), w,
                             preferred_element_type=jnp.float32)
@@ -82,22 +119,16 @@ def _zo_matmul_kernel(seed_ref, mu_ref, x_ref, w_ref, o_ref, acc_ref, *,
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
-def _noise_kernel(seed_ref, u_ref, *, nk: int, use_hw_prng: bool = False):
-    ki = pl.program_id(1)
-    ni = pl.program_id(0)
-    u_ref[...] = _uniform_tile(_tile_seed(seed_ref[0], ki, ni, nk),
-                               u_ref.shape, use_hw_prng).astype(u_ref.dtype)
-
-
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk",
                                              "interpret", "perturb"))
-def zo_matmul(x, w, seed, mu, *, bm: int = 128, bn: int = 128,
+def zo_matmul(x, w, seed, mu, *, row_offset=0, bm: int = 128, bn: int = 128,
               bk: int = 128, interpret: bool = True, perturb: bool = True):
     """y = x @ (W + mu*U(seed)); x: (M, K), w: (K, N).
 
     ``interpret=True`` executes on CPU for validation; on TPU pass
     ``interpret=False``.  ``perturb=False`` degenerates to a plain
     blocked matmul (the clean forward of the two-point estimator).
+    ``row_offset`` shifts the global noise rows (stacked scan leaves).
     """
     M, K = x.shape
     K2, N = w.shape
@@ -108,12 +139,14 @@ def zo_matmul(x, w, seed, mu, *, bm: int = 128, bn: int = 128,
     nm, nn, nk = M // bm, N // bn, K // bk
     seed_arr = jnp.asarray([seed], jnp.int32)
     mu_arr = jnp.asarray([mu], jnp.float32)
-    kernel = functools.partial(_zo_matmul_kernel, nk=nk,
+    off_arr = jnp.asarray([row_offset], jnp.int32)
+    kernel = functools.partial(_zo_matmul_kernel, nk=nk, bk=bk, bn=bn,
                                gen_noise=perturb)
     return pl.pallas_call(
         kernel,
         grid=(nm, nn, nk),
         in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec((bm, bk), lambda mi, ni, ki: (mi, ki)),
@@ -123,21 +156,123 @@ def zo_matmul(x, w, seed, mu, *, bm: int = 128, bn: int = 128,
         out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
-    )(seed_arr, mu_arr, x, w)
+    )(seed_arr, mu_arr, off_arr, x, w)
+
+
+# ---------------------------------------------------------------------------
+# fused dual-probe kernel: both estimator evals in one pass over W
+# ---------------------------------------------------------------------------
+
+def _zo_dual_kernel(seed_ref, mu_ref, off_ref, xa_ref, xb_ref, w_ref,
+                    oa_ref, ob_ref, acca_ref, accb_ref, *, nk: int,
+                    bk: int, bn: int, perturb_a: bool, perturb_b: bool):
+    ki = pl.program_id(2)
+    ni = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        acca_ref[...] = jnp.zeros_like(acca_ref)
+        accb_ref[...] = jnp.zeros_like(accb_ref)
+
+    w = w_ref[...].astype(jnp.float32)
+    if perturb_a or perturb_b:
+        u = uniform_noise(seed_ref[0], (bk, bn),
+                          row_offset=off_ref[0] + ki * bk,
+                          col_offset=ni * bn)
+    wa = w + mu_ref[0] * u if perturb_a else w
+    wb = w + mu_ref[1] * u if perturb_b else w
+    acca_ref[...] += jnp.dot(xa_ref[...].astype(jnp.float32), wa,
+                             preferred_element_type=jnp.float32)
+    accb_ref[...] += jnp.dot(xb_ref[...].astype(jnp.float32), wb,
+                             preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _done():
+        oa_ref[...] = acca_ref[...].astype(oa_ref.dtype)
+        ob_ref[...] = accb_ref[...].astype(ob_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret",
+                                             "perturb_a", "perturb_b"))
+def zo_dual_matmul(xa, xb, w, seed, mu_a, mu_b, *, row_offset=0,
+                   bm: int = 128, bn: int = 128, bk: int = 128,
+                   interpret: bool = True, perturb_a: bool = False,
+                   perturb_b: bool = True):
+    """(ya, yb) = (xa @ (W + mu_a*U), xb @ (W + mu_b*U)) in ONE pass.
+
+    Each W tile is read once and the noise tile generated once; both
+    branches stream through the MXU back to back.  This halves the HBM
+    weight traffic of the two-point estimator relative to two separate
+    ``zo_matmul`` calls:
+
+    * clean + perturbed (Eq. 2): ``perturb_a=False, mu_b=mu``
+    * antithetic +mu/-mu pair:   ``perturb_a=True, mu_a=mu, mu_b=-mu``
+
+    The per-branch results are bit-identical to the corresponding
+    single-probe ``zo_matmul`` calls (same tile schedule, same stream).
+    """
+    M, K = xa.shape
+    assert xb.shape == xa.shape, (xa.shape, xb.shape)
+    K2, N = w.shape
+    assert K == K2
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (
+        "pad inputs to tile multiples", (M, K, N), (bm, bk, bn))
+    nm, nn, nk = M // bm, N // bn, K // bk
+    seed_arr = jnp.asarray([seed], jnp.int32)
+    mu_arr = jnp.asarray([mu_a, mu_b], jnp.float32)
+    off_arr = jnp.asarray([row_offset], jnp.int32)
+    kernel = functools.partial(_zo_dual_kernel, nk=nk, bk=bk, bn=bn,
+                               perturb_a=perturb_a, perturb_b=perturb_b)
+    return pl.pallas_call(
+        kernel,
+        grid=(nm, nn, nk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((bm, bk), lambda mi, ni, ki: (mi, ki)),
+            pl.BlockSpec((bm, bk), lambda mi, ni, ki: (mi, ki)),
+            pl.BlockSpec((bk, bn), lambda mi, ni, ki: (ki, ni)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda mi, ni, ki: (mi, ni)),
+            pl.BlockSpec((bm, bn), lambda mi, ni, ki: (mi, ni)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((M, N), xa.dtype),
+                   jax.ShapeDtypeStruct((M, N), xb.dtype)],
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32),
+                        pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(seed_arr, mu_arr, off_arr, xa, xb, w)
+
+
+# ---------------------------------------------------------------------------
+# noise materialization (tests / replay cross-checks only)
+# ---------------------------------------------------------------------------
+
+def _noise_kernel(seed_ref, u_ref, *, bk: int, bn: int):
+    ki = pl.program_id(1)
+    ni = pl.program_id(0)
+    u_ref[...] = uniform_noise(seed_ref[0], (bk, bn),
+                               row_offset=ki * bk,
+                               col_offset=ni * bn).astype(u_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("bn", "bk", "interpret"))
 def zo_noise(w_shape_like, seed, *, bn: int = 128, bk: int = 128,
              interpret: bool = True):
-    """Materialize U(seed) with the kernel's exact per-tile PRNG stream
-    (test/debug only — production never materializes U)."""
+    """Materialize U(seed) with the kernel's exact PRNG stream
+    (test/debug only — production never materializes U).  Because the
+    stream is addressed by global coordinates, the result is independent
+    of ``bn``/``bk`` and equals ``uniform_noise(seed, w.shape)``."""
     K, N = w_shape_like.shape
     bn, bk = min(bn, N), min(bk, K)
     assert N % bn == 0 and K % bk == 0
     nn, nk = N // bn, K // bk
     seed_arr = jnp.asarray([seed], jnp.int32)
     return pl.pallas_call(
-        functools.partial(_noise_kernel, nk=nk),
+        functools.partial(_noise_kernel, bk=bk, bn=bn),
         grid=(nn, nk),
         in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM)],
         out_specs=pl.BlockSpec((bk, bn), lambda ni, ki: (ki, ni)),

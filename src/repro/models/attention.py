@@ -12,6 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.distributed.sharding import AxisRules, constrain
+from repro.kernels.ops import psub
 from repro.models import layers as L
 from repro.models.config import ModelConfig
 
@@ -229,18 +230,26 @@ def decode_attention(q, k_cache, v_cache, valid_len, *, window=0, cap=None,
 
 def attention_layer(params, x, cfg: ModelConfig, rules: AxisRules, *,
                     positions=None, local: bool = False, cache=None,
-                    cross_kv=None, decode: bool = False):
+                    cross_kv=None, decode: bool = False, perturb=None):
     """Returns (out, new_cache).  ``cache`` (decode mode) is a dict
     {k, v, pos}; cross_kv provides precomputed (k, v) for cross-attention.
+    ``perturb`` (training-time ZO context) fuses weight noise into the
+    q/k/v/o projections; unsupported combined with decode/cache/cross.
     """
+    if perturb is not None:
+        assert cache is None and cross_kv is None and not decode, \
+            "ZO perturbed forward is a training-time path"
     B, S, _ = x.shape
     hd = cfg.resolved_head_dim
     cdt = cfg.jnp_compute_dtype()
     window = cfg.window if local else 0
-    q = _split_heads(L.dense(params["wq"], x, cdt), cfg.n_heads, hd)
+    q = _split_heads(L.dense(params["wq"], x, cdt, psub(perturb, "wq")),
+                     cfg.n_heads, hd)
     if cross_kv is None:
-        k = _split_heads(L.dense(params["wk"], x, cdt), cfg.n_kv_heads, hd)
-        v = _split_heads(L.dense(params["wv"], x, cdt), cfg.n_kv_heads, hd)
+        k = _split_heads(L.dense(params["wk"], x, cdt, psub(perturb, "wk")),
+                         cfg.n_kv_heads, hd)
+        v = _split_heads(L.dense(params["wv"], x, cdt, psub(perturb, "wv")),
+                         cfg.n_kv_heads, hd)
     else:
         k, v = cross_kv
     if positions is None:
@@ -308,7 +317,7 @@ def attention_layer(params, x, cfg: ModelConfig, rules: AxisRules, *,
                                                and not cfg.seq_sharding),
                                   p_dtype=jnp.dtype(cfg.attn_p_dtype))
     o = o.reshape(B, S, cfg.n_heads * hd)
-    out = L.dense(params["wo"], o, cdt)
+    out = L.dense(params["wo"], o, cdt, psub(perturb, "wo"))
     return constrain(out, rules, ("batch", None, None)), new_cache
 
 

@@ -15,7 +15,8 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import ParamBuilder
+from repro.kernels import ops as O
+from repro.models.layers import ParamBuilder, dense
 
 
 @dataclasses.dataclass(frozen=True)
@@ -26,6 +27,10 @@ class CNNConfig:
     client_blocks: int = 1       # residual blocks on the client
     groups: int = 8
     param_dtype: str = "float32"
+    forward_impl: str = "xla"    # xla | kernel | kernel_interpret: route
+                                 # the ZO perturbed client forward through
+                                 # the Pallas dual-probe matmuls (convs
+                                 # lower via im2col)
 
 
 def _conv_init(pb: ParamBuilder, path, kh, kw, cin, cout):
@@ -65,10 +70,86 @@ def _block_init(pb, path, cin, cout, stride):
     return p
 
 
-def _block_apply(p, x, stride, groups):
-    h = jax.nn.relu(groupnorm(p["n1"], conv(p["c1"], x, stride), groups))
-    h = groupnorm(p["n2"], conv(p["c2"], h), groups)
-    sc = conv(p["proj"], x, stride) if "proj" in p else x
+def _im2col(x, kh, kw, stride):
+    """SAME-padded patch extraction: (B,H,W,C) -> (B,Ho,Wo,kh*kw*C) with
+    patch channel order (i, j, c) — the linearization of a (kh,kw,cin,·)
+    conv weight's leading axes, so ``patches @ w.reshape(kh*kw*cin, cout)``
+    is the conv and the weight's canonical 2-D noise field applies
+    unchanged.  Padding splits match XLA SAME (lo = pad//2)."""
+    B, H, W, C = x.shape
+    ho = -(-H // stride)
+    wo = -(-W // stride)
+    ph = max((ho - 1) * stride + kh - H, 0)
+    pw = max((wo - 1) * stride + kw - W, 0)
+    xp = jnp.pad(x, ((0, 0), (ph // 2, ph - ph // 2),
+                     (pw // 2, pw - pw // 2), (0, 0)))
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            cols.append(jax.lax.slice(
+                xp, (0, i, j, 0),
+                (B, i + (ho - 1) * stride + 1,
+                 j + (wo - 1) * stride + 1, C),
+                (1, stride, stride, 1)))
+    return jnp.concatenate(cols, axis=-1), ho, wo
+
+
+def conv_perturbed(w, x, stride, seed, perturb):
+    """Conv with the ZO weight perturbation fused into a zo_matmul over
+    im2col patches (1x1 convs lower to a plain reshaped matmul).  In dual
+    mode the [clean; perturbed] halves ride the leading batch axis and
+    one fused pass serves both probes."""
+    kh, kw, cin, cout = w.shape
+    if kh == kw == 1 and stride == 1:
+        cols, ho, wo = x, x.shape[1], x.shape[2]
+    else:
+        cols, ho, wo = _im2col(x, kh, kw, stride)
+    w2 = w.reshape(kh * kw * cin, cout)
+    x2 = cols.reshape(-1, kh * kw * cin)
+    if perturb.dual:
+        half = x2.shape[0] // 2
+        ya, yb = O.zo_dual_matmul(x2[:half], x2[half:], w2, seed, 0.0,
+                                  perturb.mu, impl=perturb.impl)
+        y2 = jnp.concatenate([ya, yb], axis=0)
+    else:
+        y2 = O.zo_matmul(x2, w2, seed, perturb.mu, impl=perturb.impl)
+    return y2.reshape(x.shape[0], ho, wo, cout)
+
+
+def _conv_maybe(w, x, stride, seed, perturb):
+    if seed is None:
+        return conv(w, x, stride)
+    return conv_perturbed(w, x, stride, seed, perturb)
+
+
+def _gn_maybe(p, x, groups, seeds, perturb):
+    if perturb is None or not O.any_seed(seeds):
+        return groupnorm(p, x, groups)
+    pp = O.perturb_tree(p, seeds, perturb.mu)
+    if not perturb.dual:
+        return groupnorm(pp, x, groups)
+    half = x.shape[0] // 2
+    return jnp.concatenate([groupnorm(p, x[:half], groups),
+                            groupnorm(pp, x[half:], groups)], axis=0)
+
+
+def _block_apply(p, x, stride, groups, perturb=None):
+    if perturb is not None and not O.any_seed(perturb.seeds):
+        perturb = None
+    if perturb is None:
+        h = jax.nn.relu(groupnorm(p["n1"], conv(p["c1"], x, stride),
+                                  groups))
+        h = groupnorm(p["n2"], conv(p["c2"], h), groups)
+        sc = conv(p["proj"], x, stride) if "proj" in p else x
+        return jax.nn.relu(h + sc)
+    s = perturb.seeds
+    h = _conv_maybe(p["c1"], x, stride, s.get("c1"), perturb)
+    h = jax.nn.relu(_gn_maybe(p["n1"], h, groups, s.get("n1"), perturb))
+    h = _gn_maybe(p["n2"], _conv_maybe(p["c2"], h, 1, s.get("c2"),
+                                       perturb),
+                  groups, s.get("n2"), perturb)
+    sc = _conv_maybe(p["proj"], x, stride, s.get("proj"), perturb) \
+        if "proj" in p else x
     return jax.nn.relu(h + sc)
 
 
@@ -112,19 +193,36 @@ def init_cnn(rng, cfg: CNNConfig, mode: str = "init"):
     return {"client": client, "server": server}
 
 
-def client_forward(client, x, cfg: CNNConfig):
-    """x: (B, H, W, 3) -> smashed feature map."""
-    h = jax.nn.relu(groupnorm(client["stem"]["norm"],
-                              conv(client["stem"]["conv"], x), cfg.groups))
+def client_forward(client, x, cfg: CNNConfig, perturb=None):
+    """x: (B, H, W, 3) -> smashed feature map.  With ``perturb`` the
+    client pass is ZO-perturbed (convs lower onto the fused zo_matmul via
+    im2col); ``perturb.dual`` doubles the batch into [clean; perturbed]
+    halves at entry."""
+    if perturb is not None and not O.any_seed(perturb.seeds):
+        perturb = None
+    if perturb is not None and perturb.dual:
+        x = jnp.concatenate([x, x], axis=0)
+    ps = O.psub(perturb, "stem")
+    h = _conv_maybe(client["stem"]["conv"], x, 1,
+                    None if ps is None else ps.seeds.get("conv"),
+                    perturb)
+    h = jax.nn.relu(_gn_maybe(client["stem"]["norm"], h, cfg.groups,
+                              None if ps is None else ps.seeds.get("norm"),
+                              perturb))
+    pblocks = O.psub(perturb, "blocks")
     plan = _stage_plan(cfg)
-    for p, (_, _, _, _, stride) in zip(client["blocks"], plan):
-        h = _block_apply(p, h, stride, cfg.groups)
+    for i, (p, (_, _, _, _, stride)) in enumerate(zip(client["blocks"],
+                                                      plan)):
+        h = _block_apply(p, h, stride, cfg.groups, O.psub(pblocks, i))
     return h
 
 
-def aux_logits(client, smashed, cfg: CNNConfig):
+def aux_logits(client, smashed, cfg: CNNConfig, perturb=None):
     pooled = jnp.mean(smashed, axis=(1, 2))
     fc = client["aux"]["fc"]
+    pf = O.psub(O.psub(perturb, "aux"), "fc")
+    if pf is not None:
+        return dense(fc, pooled.astype(jnp.float32), jnp.float32, pf)
     return pooled.astype(jnp.float32) @ fc["w"].astype(jnp.float32) \
         + fc["b"].astype(jnp.float32)
 

@@ -76,6 +76,11 @@ class ModelConfig:
     remat_policy: str = "nothing"  # nothing|save_gathers (keep FSDP-gathered
                                    # MoE weights across the bwd replay)
     scan_layers: bool = True
+    forward_impl: str = "xla"      # xla | kernel | kernel_interpret:
+                                   # "kernel" routes the client-side ZO
+                                   # perturbed forward through the Pallas
+                                   # dual-probe matmuls (emulated bit-
+                                   # equivalently off-TPU)
     optimizer: str = "adamw"       # adamw|adafactor|sgdm (server side)
     # assigned-shape bookkeeping
     family: str = "dense"          # dense|moe|audio|ssm|hybrid|vlm

@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import ops as O
+
 
 def _path_seed(path: str) -> int:
     # stable 31-bit hash of the param path
@@ -109,7 +111,9 @@ def init_dense(pb: ParamBuilder, path: str, d_in: int, d_out: int,
     return p
 
 
-def dense(params, x, compute_dtype=None):
+def dense(params, x, compute_dtype=None, perturb=None):
+    if perturb is not None and O.any_seed(perturb.seeds):
+        return _dense_perturbed(params, x, perturb, compute_dtype)
     w = params["w"]
     if compute_dtype is not None:
         w = w.astype(compute_dtype)
@@ -121,6 +125,81 @@ def dense(params, x, compute_dtype=None):
     if "b" in params:
         y = y + params["b"].astype(y.dtype)
     return y
+
+
+def _pleaf(p, seed, mu, rep=0):
+    """theta + mu*U(seed) for one small leaf (bias / LoRA adapter)."""
+    if seed is None:
+        return p
+    u = O.leaf_noise(seed, p.shape, rep)
+    return (p.astype(jnp.float32)
+            + jnp.asarray(mu, jnp.float32) * u).astype(p.dtype)
+
+
+def _dense_perturbed(params, x, perturb, compute_dtype=None):
+    """Dense with the ZO perturbation fused into the matmul.
+
+    The weight noise is generated inside :func:`repro.kernels.ops.
+    zo_matmul` (never materialized); in dual mode the activations carry
+    [clean; perturbed] halves along the leading axis and the fused
+    dual-probe kernel serves both from one read of W.  ``perturb.rep``
+    row-offsets the noise for params sliced out of a stacked scan leaf,
+    so server-side whole-leaf replay sees the same stream.
+    """
+    w = params["w"]
+    if compute_dtype is not None:
+        w = w.astype(compute_dtype)
+        x = x.astype(compute_dtype)
+    seeds = perturb.seeds if isinstance(perturb.seeds, dict) else {}
+    mu, rep = perturb.mu, perturb.rep
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])   # batch axis leads: rows [0, M/2)
+    half = x2.shape[0] // 2           # of the dual stack are the clean half
+    off = jnp.asarray(rep, jnp.int32) * w.shape[0]
+    sw = seeds.get("w")
+    if sw is None:
+        y2 = x2 @ w
+    elif perturb.dual:
+        ya, yb = O.zo_dual_matmul(x2[:half], x2[half:], w, sw, 0.0, mu,
+                                  row_offset=off, impl=perturb.impl)
+        y2 = jnp.concatenate([ya, yb], axis=0)
+    else:
+        y2 = O.zo_matmul(x2, w, sw, mu, row_offset=off, impl=perturb.impl)
+
+    if "lora_a" in params:
+        la = params["lora_a"].astype(x2.dtype)
+        lb = params["lora_b"].astype(x2.dtype)
+        lap = _pleaf(la, seeds.get("lora_a"), mu, rep)
+        lbp = _pleaf(lb, seeds.get("lora_b"), mu, rep)
+        if perturb.dual:
+            y2 = y2 + jnp.concatenate(
+                [(x2[:half] @ la) @ lb, (x2[half:] @ lap) @ lbp], axis=0)
+        else:
+            y2 = y2 + (x2 @ lap) @ lbp
+    if "b" in params:
+        b = params["b"]
+        bp = _pleaf(b, seeds.get("b"), mu, rep)
+        if perturb.dual:
+            y2 = y2 + jnp.concatenate(
+                [jnp.broadcast_to(b.astype(y2.dtype), (half, b.shape[-1])),
+                 jnp.broadcast_to(bp.astype(y2.dtype),
+                                  (y2.shape[0] - half, b.shape[-1]))], axis=0)
+        else:
+            y2 = y2 + bp.astype(y2.dtype)
+    return y2.reshape(lead + (w.shape[1],))
+
+
+def norm_apply(norm_fn, params, x, perturb=None):
+    """Apply a norm with optionally ZO-perturbed scale/bias; in dual mode
+    only the perturbed half of the activation stack sees the noise."""
+    if perturb is None or not O.any_seed(perturb.seeds):
+        return norm_fn(params, x)
+    pp = O.perturb_tree(params, perturb.seeds, perturb.mu, perturb.rep)
+    if not perturb.dual:
+        return norm_fn(pp, x)
+    half = x.shape[0] // 2
+    return jnp.concatenate([norm_fn(params, x[:half]),
+                            norm_fn(pp, x[half:])], axis=0)
 
 
 def init_embedding(pb: ParamBuilder, path: str, vocab: int, dim: int):
@@ -202,15 +281,16 @@ def init_mlp(pb: ParamBuilder, path: str, d_model: int, d_ff: int,
     return p
 
 
-def mlp(params, x, activation: str = "silu", compute_dtype=None):
-    up = dense(params["up"], x, compute_dtype)
+def mlp(params, x, activation: str = "silu", compute_dtype=None,
+        perturb=None):
+    up = dense(params["up"], x, compute_dtype, O.psub(perturb, "up"))
     if "gate" in params:
-        g = dense(params["gate"], x, compute_dtype)
+        g = dense(params["gate"], x, compute_dtype, O.psub(perturb, "gate"))
         act = jax.nn.silu(g) if activation == "silu" else jax.nn.gelu(g)
         h = act * up
     else:
         h = jax.nn.silu(up) if activation == "silu" else jax.nn.gelu(up)
-    return dense(params["down"], h, compute_dtype)
+    return dense(params["down"], h, compute_dtype, O.psub(perturb, "down"))
 
 
 # ---------------------------------------------------------------------------

@@ -10,6 +10,7 @@ their own compressed stack).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Any, Sequence
 
@@ -17,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed.sharding import AxisRules, constrain
+from repro.kernels import ops as O
 from repro.models import attention as A
 from repro.models import layers as L
 from repro.models import moe as M
@@ -62,23 +64,56 @@ def init_block(pb: L.ParamBuilder, path: str, spec: LayerSpec,
     return p
 
 
-def _norm(cfg: ModelConfig, params, x):
-    return (L.rmsnorm(params, x) if cfg.norm == "rmsnorm"
-            else L.layernorm(params, x))
+def _norm(cfg: ModelConfig, params, x, perturb=None):
+    fn = L.rmsnorm if cfg.norm == "rmsnorm" else L.layernorm
+    return L.norm_apply(fn, params, x, perturb)
+
+
+def _block_fallback(params, x, spec: LayerSpec, cfg: ModelConfig,
+                    rules: AxisRules, perturb, *, positions=None,
+                    enc_out=None):
+    """Whole-block XLA fallback for mixers without a fused kernel lowering
+    (recurrent blocks, MoE, cross-attention): materialize theta + mu*U for
+    the block's seeded params and run the unmodified block — the noise
+    stream (per-leaf hash seeds on canonical 2-D coordinates) is the same
+    one the fused path generates in-kernel, so replay stays exact."""
+    pp = O.perturb_tree(params, perturb.seeds, perturb.mu, perturb.rep)
+    if not perturb.dual:
+        return apply_block(pp, x, spec, cfg, rules, positions=positions,
+                           enc_out=enc_out)
+    half = x.shape[0] // 2
+    pos_a = pos_b = positions
+    if positions is not None and positions.shape[0] == x.shape[0]:
+        pos_a, pos_b = positions[:half], positions[half:]
+    enc_a = enc_b = enc_out
+    if enc_out is not None and enc_out.shape[0] == x.shape[0]:
+        enc_a, enc_b = enc_out[:half], enc_out[half:]
+    xa, _ = apply_block(params, x[:half], spec, cfg, rules,
+                        positions=pos_a, enc_out=enc_a)
+    xb, _ = apply_block(pp, x[half:], spec, cfg, rules,
+                        positions=pos_b, enc_out=enc_b)
+    return jnp.concatenate([xa, xb], axis=0), None
 
 
 def apply_block(params, x, spec: LayerSpec, cfg: ModelConfig,
                 rules: AxisRules, *, positions=None, cache=None,
-                decode=False, enc_out=None, causal=True):
+                decode=False, enc_out=None, causal=True, perturb=None):
     """Returns (x, new_cache)."""
-    h = _norm(cfg, params["norm1"], x)
+    if perturb is not None and not O.any_seed(perturb.seeds):
+        perturb = None
+    if perturb is not None and (
+            spec.mixer not in ATTN_MIXERS or spec.ffn == "moe"
+            or ("cross" in params and enc_out is not None)):
+        return _block_fallback(params, x, spec, cfg, rules, perturb,
+                               positions=positions, enc_out=enc_out)
+    h = _norm(cfg, params["norm1"], x, O.psub(perturb, "norm1"))
     new_cache: dict[str, Any] = {}
     if spec.mixer in ATTN_MIXERS:
         attn_cache = None if cache is None else cache.get("attn")
         o, nc = A.attention_layer(
             params["attn"], h, cfg, rules, positions=positions,
             local=(spec.mixer == "local_attn"), cache=attn_cache,
-            decode=decode)
+            decode=decode, perturb=O.psub(perturb, "attn"))
         if nc is not None:
             new_cache["attn"] = nc
     else:
@@ -90,7 +125,7 @@ def apply_block(params, x, spec: LayerSpec, cfg: ModelConfig,
         if decode or rec_state is not None:
             new_cache["rec"] = ns
     if cfg.post_norm:
-        o = _norm(cfg, params["postnorm1"], o)
+        o = _norm(cfg, params["postnorm1"], o, O.psub(perturb, "postnorm1"))
     x = x + o
     if "cross" in params and enc_out is not None:
         hc = _norm(cfg, params["cross_norm"], x)
@@ -104,14 +139,15 @@ def apply_block(params, x, spec: LayerSpec, cfg: ModelConfig,
                                  positions=positions, cross_kv=(k, v))
         x = x + o
     if spec.ffn != "none":
-        h = _norm(cfg, params["norm2"], x)
+        h = _norm(cfg, params["norm2"], x, O.psub(perturb, "norm2"))
         if spec.ffn == "dense":
             o = L.mlp(params["mlp"], h, cfg.activation,
-                      cfg.jnp_compute_dtype())
+                      cfg.jnp_compute_dtype(), O.psub(perturb, "mlp"))
         else:
             o = M.moe_ffn(params["moe"], h, cfg, rules)
         if cfg.post_norm:
-            o = _norm(cfg, params["postnorm2"], o)
+            o = _norm(cfg, params["postnorm2"], o,
+                      O.psub(perturb, "postnorm2"))
         x = x + o
     seq_ax = "seq_model" if (cfg.seq_sharding and not decode) else None
     x = constrain(x, rules, ("batch", seq_ax, None))
@@ -209,24 +245,38 @@ def init_stack_cache(cfg: ModelConfig, specs: Sequence[LayerSpec],
 
 def apply_stack(stack_params, x, cfg: ModelConfig, rules: AxisRules,
                 specs: Sequence[LayerSpec], *, positions=None, caches=None,
-                decode=False, enc_out=None):
-    """Returns (x, new_caches)."""
+                decode=False, enc_out=None, perturb=None):
+    """Returns (x, new_caches).  ``perturb.seeds`` (if given) is a list
+    mirroring ``stack_params``: one scalar seed per stacked leaf.  The
+    scan body carries the repeat index so each rep addresses its own row
+    band of the stacked leaf's noise field (``Perturb.rep``)."""
     segments = build_segments(specs)
     new_caches = []
     for si, (unit, reps) in enumerate(segments):
         seg_params = stack_params[si]
         seg_cache = None if caches is None else caches[si]
+        seg_seeds = (perturb.seeds[si] if perturb is not None
+                     and perturb.seeds is not None else None)
+        seg_perturb = (dataclasses.replace(perturb, seeds=seg_seeds)
+                       if perturb is not None and O.any_seed(seg_seeds)
+                       else None)
 
-        def body(carry, per_rep, unit=unit):
+        def body(carry, per_rep, unit=unit, seg_perturb=seg_perturb):
             xb = carry
-            params_rep = per_rep[0]
-            cache_rep = per_rep[1]
+            params_rep, cache_rep, rep_idx = per_rep
             ncs = []
             for j, spec in enumerate(unit):
                 cj = None if cache_rep is None else cache_rep[j]
+                pj = None
+                if seg_perturb is not None and O.any_seed(
+                        seg_perturb.seeds[j]):
+                    pj = dataclasses.replace(seg_perturb,
+                                             seeds=seg_perturb.seeds[j],
+                                             rep=rep_idx)
                 xb, nc = apply_block(params_rep[j], xb, spec, cfg, rules,
                                      positions=positions, cache=cj,
-                                     decode=decode, enc_out=enc_out)
+                                     decode=decode, enc_out=enc_out,
+                                     perturb=pj)
                 ncs.append(nc if nc is not None else {})
             return xb, tuple(ncs)
 
@@ -240,7 +290,8 @@ def apply_stack(stack_params, x, cfg: ModelConfig, rules: AxisRules,
                 body = jax.checkpoint(body)
 
         if cfg.scan_layers and reps > 1:
-            x, ncs = jax.lax.scan(body, x, (seg_params, seg_cache))
+            x, ncs = jax.lax.scan(body, x, (seg_params, seg_cache,
+                                            jnp.arange(reps)))
         else:
             # unrolled
             ncs_list = []
@@ -248,7 +299,7 @@ def apply_stack(stack_params, x, cfg: ModelConfig, rules: AxisRules,
                 pr = jax.tree.map(lambda p: p[r], seg_params)
                 cr = None if seg_cache is None else jax.tree.map(
                     lambda c: c[r], seg_cache)
-                x, nc = body(x, (pr, cr))
+                x, nc = body(x, (pr, cr, jnp.asarray(r)))
                 ncs_list.append(nc)
             ncs = jax.tree.map(lambda *xs: jnp.stack(xs), *ncs_list) \
                 if ncs_list and any(jax.tree.leaves(n) for n in ncs_list) \
@@ -336,30 +387,93 @@ def embed_inputs(client_params, cfg: ModelConfig, tokens_or_embeds):
     return x
 
 
+def _embed_perturbed(client_params, cfg: ModelConfig, inputs, perturb):
+    """embed_inputs with the ZO table perturbation.  The noise rows are
+    gathered per token id (``uniform_noise_at``), never materializing the
+    (vocab, d_model) field; in dual mode returns the stacked
+    [clean; perturbed] embedding on a doubled batch axis."""
+    cdt = cfg.jnp_compute_dtype()
+    if jnp.issubdtype(inputs.dtype, jnp.integer):
+        x = L.embed(client_params["embed"], inputs, cdt)
+        pe = O.psub(perturb, "embed")
+        st = None if pe is None else pe.seeds.get("table")
+        if st is None:
+            xp = x
+        else:
+            u = O.uniform_noise_at(st, inputs[..., None],
+                                   jnp.arange(x.shape[-1]))
+            xp = (x.astype(jnp.float32)
+                  + jnp.asarray(perturb.mu, jnp.float32) * u).astype(cdt)
+    else:
+        x = xp = inputs.astype(cdt)
+    x = jnp.concatenate([x, xp], axis=0) if perturb.dual else xp
+    if cfg.name.startswith("gemma") or cfg.name.startswith("recurrentgemma"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cdt)
+    return x
+
+
 def client_forward(client_params, cfg: ModelConfig, rules: AxisRules,
-                   inputs, positions=None, caches=None, decode=False):
-    """Embedding + client blocks -> smashed data (cut-layer activations)."""
-    x = embed_inputs(client_params, cfg, inputs)
+                   inputs, positions=None, caches=None, decode=False,
+                   perturb=None):
+    """Embedding + client blocks -> smashed data (cut-layer activations).
+
+    With ``perturb`` (a :class:`repro.kernels.ops.Perturb`) the forward
+    is the ZO-perturbed client pass: weight noise is fused into the
+    matmul kernels per layer; ``perturb.dual`` stacks the clean and
+    perturbed probes on the leading batch axis so one pass yields both
+    losses of the two-point estimator."""
+    if perturb is not None and not O.any_seed(perturb.seeds):
+        perturb = None
+    if perturb is None:
+        x = embed_inputs(client_params, cfg, inputs)
+    else:
+        assert caches is None and not decode
+        x = _embed_perturbed(client_params, cfg, inputs, perturb)
+        if perturb.dual and positions is not None:
+            positions = jnp.concatenate([positions, positions], axis=0)
     seq_ax = "seq_model" if (cfg.seq_sharding and not decode) else None
     x = constrain(x, rules, ("batch", seq_ax, None))
     x, ncs = apply_stack(client_params["layers"], x, cfg, rules,
                          client_specs(cfg), positions=positions,
-                         caches=caches, decode=decode)
+                         caches=caches, decode=decode,
+                         perturb=O.psub(perturb, "layers"))
     return x, ncs
 
 
 def aux_forward(client_params, cfg: ModelConfig, rules: AxisRules,
-                smashed, positions=None):
-    """Aux head on smashed data -> logits (client-local predictor)."""
+                smashed, positions=None, perturb=None):
+    """Aux head on smashed data -> logits (client-local predictor).
+
+    In dual mode ``smashed`` carries [clean; perturbed] halves and the
+    tied unembedding perturbs the table for the second half only (same
+    table noise the embedding applied — one leaf, one seed)."""
+    if perturb is not None and not O.any_seed(perturb.seeds):
+        perturb = None
     aux = client_params["aux"]
+    pa = O.psub(perturb, "aux")
     x = smashed
     if "layers" in aux:
         specs = tuple(cfg.layer_specs()[cfg.cut_layers:
                                         cfg.cut_layers + cfg.aux_layers])
         x, _ = apply_stack(aux["layers"], x, cfg, rules, specs,
-                           positions=positions)
-    x = _norm(cfg, aux["norm"], x)
-    logits = L.unembed(client_params["embed"], x, jnp.float32)
+                           positions=positions,
+                           perturb=O.psub(pa, "layers"))
+    x = _norm(cfg, aux["norm"], x, O.psub(pa, "norm"))
+    pe = O.psub(perturb, "embed")
+    st = None if pe is None else pe.seeds.get("table")
+    if st is None:
+        logits = L.unembed(client_params["embed"], x, jnp.float32)
+    else:
+        table = client_params["embed"]["table"].astype(jnp.float32)
+        tp = table + jnp.asarray(perturb.mu, jnp.float32) \
+            * O.leaf_noise(st, table.shape)
+        if perturb.dual:
+            half = x.shape[0] // 2
+            logits = jnp.concatenate(
+                [x[:half].astype(jnp.float32) @ table.T,
+                 x[half:].astype(jnp.float32) @ tp.T], axis=0)
+        else:
+            logits = x.astype(jnp.float32) @ tp.T
     logits = constrain(logits, rules, ("batch", None, "vocab"))
     return L.softcap(logits, cfg.final_softcap)
 

@@ -87,3 +87,97 @@ def test_rg_lru_scan_sweep(b, s, w, bt, bw):
     h_r = ref.rg_lru_scan_ref(a, bb)
     np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_r),
                                rtol=2e-4, atol=2e-5)
+
+# --- fused dual probe -------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [(32, 128, 128), (64, 256, 128),
+                                   (16, 96, 64)])
+def test_zo_dual_matmul_matches_two_single_passes(m, k, n):
+    """One fused pass == two independent zo_matmul calls, bitwise."""
+    xa = jax.random.normal(jax.random.PRNGKey(0), (m, k))
+    xb = jax.random.normal(jax.random.PRNGKey(1), (m, k))
+    w = jax.random.normal(jax.random.PRNGKey(2), (k, n))
+    bs = dict(bm=16, bn=32, bk=32)
+    ya, yb = ops.zo_dual_matmul(xa, xb, w, 11, 0.0, 0.05,
+                                impl="interpret", **bs)
+    ya1 = ops.zo_matmul(xa, w, 11, 0.0, impl="interpret", perturb=False,
+                        **bs)
+    yb1 = ops.zo_matmul(xb, w, 11, 0.05, impl="interpret", **bs)
+    np.testing.assert_array_equal(np.asarray(ya), np.asarray(ya1))
+    np.testing.assert_array_equal(np.asarray(yb), np.asarray(yb1))
+
+
+def test_zo_dual_matmul_vs_ref_oracle():
+    xa = jax.random.normal(jax.random.PRNGKey(0), (32, 128))
+    xb = jax.random.normal(jax.random.PRNGKey(1), (32, 128))
+    w = jax.random.normal(jax.random.PRNGKey(2), (128, 64))
+    u = ops.zo_noise(w, 9)
+    ya, yb = ops.zo_dual_matmul(xa, xb, w, 9, 0.0, 0.1, bm=32)
+    ra, rb = ref.zo_dual_matmul_ref(xa, xb, w, u, 0.0, 0.1)
+    np.testing.assert_allclose(np.asarray(ya), np.asarray(ra),
+                               rtol=5e-5, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(yb), np.asarray(rb),
+                               rtol=5e-5, atol=5e-4)
+
+
+def test_zo_dual_matmul_antithetic_pair():
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 64))
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 64))
+    ya, yb = ops.zo_dual_matmul(x, x, w, 3, 0.05, -0.05,
+                                perturb_a=True, perturb_b=True, bm=16)
+    yp = ops.zo_matmul(x, w, 3, 0.05, bm=16)
+    ym = ops.zo_matmul(x, w, 3, -0.05, bm=16)
+    np.testing.assert_array_equal(np.asarray(ya), np.asarray(yp))
+    np.testing.assert_array_equal(np.asarray(yb), np.asarray(ym))
+
+
+@pytest.mark.parametrize("bs", [dict(bm=16, bn=32, bk=32),
+                                dict(bm=32, bn=64, bk=128),
+                                dict(bm=64, bn=128, bk=64)])
+def test_noise_block_size_invariance(bs):
+    """The hash-noise field is a function of global (row, col) only —
+    re-tiling must not change a bit of it.  The matmul result is only
+    allclose across bk (the K-reduction split changes summation order)."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 128))
+    w = jax.random.normal(jax.random.PRNGKey(1), (128, 128))
+    base = ops.zo_matmul(x, w, 21, 0.1, bm=64, bn=128, bk=128)
+    y = ops.zo_matmul(x, w, 21, 0.1, impl="interpret", **bs)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(base),
+                               rtol=1e-5, atol=1e-4)
+    u = ops.zo_noise(w, 21)
+    u2 = ops.zo_noise(w, 21, bn=bs["bn"], bk=bs["bk"])
+    np.testing.assert_array_equal(np.asarray(u), np.asarray(u2))
+
+
+def test_xla_emulation_matches_kernel():
+    """impl="xla" consumes the identical hash-noise stream (bitwise);
+    the matmul itself differs only by contraction/FMA order."""
+    from repro.kernels import zo_matmul as ZM
+    x = jax.random.normal(jax.random.PRNGKey(0), (32, 128))
+    w = jax.random.normal(jax.random.PRNGKey(1), (128, 64))
+    u_jnp = ZM.uniform_noise(5, w.shape)           # pure-jnp stream
+    u_kern = ops.zo_noise(w, 5)                    # interpret kernel
+    np.testing.assert_array_equal(np.asarray(u_jnp), np.asarray(u_kern))
+    yk = ops.zo_matmul(x, w, 5, 0.07, impl="interpret", bm=32)
+    ye = ops.zo_matmul(x, w, 5, 0.07, impl="xla")
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(ye),
+                               rtol=1e-5, atol=1e-4)
+    da, db = ops.zo_dual_matmul(x, x, w, 5, 0.0, 0.07, impl="interpret",
+                                bm=32)
+    ea, eb = ops.zo_dual_matmul(x, x, w, 5, 0.0, 0.07, impl="xla")
+    np.testing.assert_allclose(np.asarray(da), np.asarray(ea),
+                               rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(db), np.asarray(eb),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_row_offset_addresses_global_rows():
+    """row_offset r*K must reproduce rows [r*K, (r+1)*K) of the stacked
+    field — the contract scan-stacked layers rely on."""
+    from repro.kernels import zo_matmul as ZM
+    K, N = 64, 64
+    stacked = ZM.uniform_noise(13, (3 * K, N))
+    for r in range(3):
+        u_r = ZM.uniform_noise(13, (K, N), row_offset=r * K)
+        np.testing.assert_array_equal(np.asarray(u_r),
+                                      np.asarray(stacked[r * K:(r + 1) * K]))
