@@ -395,6 +395,83 @@ def bench_seed_replay():
 
 
 # ---------------------------------------------------------------------------
+def bench_seed_replay_scaling():
+    """N-scaling of the mesh-sharded seed-replay reconstruction.
+
+    For each cohort size N the Fed-Server replays N·h·n_pairs directions
+    flat (one scan) and sharded over a ``("clients",)`` device mesh; the
+    row records both wall-clocks, the speedup, and the sharded-vs-flat
+    max error (fp32 summation-order noise only).  On a single-device CPU
+    host the bench re-execs itself with a forced 4-device host platform
+    so the sharded path has a real mesh to scale over, and re-emits the
+    child's rows.  REPRO_SCALING_NMAX caps the sweep (CI).
+    """
+    import subprocess
+    import sys
+
+    from repro.core import aggregate as AG
+    from repro.core import zo as Z
+
+    n_max = int(os.environ.get("REPRO_SCALING_NMAX", "100000"))
+    if (jax.default_backend() == "cpu" and jax.device_count() == 1
+            and os.environ.get("REPRO_SCALING_SUBPROC") != "1"):
+        env = dict(os.environ, REPRO_SCALING_SUBPROC="1",
+                   XLA_FLAGS=(os.environ.get("XLA_FLAGS", "")
+                              + " --xla_force_host_platform_device_count=4"))
+        r = subprocess.run([sys.executable, os.path.abspath(__file__),
+                            "seed_replay_scaling"], env=env,
+                           capture_output=True, text=True, timeout=3000)
+        if r.returncode != 0:
+            raise RuntimeError("scaling subprocess failed: "
+                               + r.stderr[-300:])
+        for line in r.stdout.splitlines():
+            if line.startswith("seed_replay_scaling/"):
+                name, us, derived = line.split(",", 2)
+                row(name, float(us), derived)
+        return
+
+    devs = jax.device_count()
+    params = {"w": jax.random.normal(jax.random.PRNGKey(0), (128, 64)),
+              "b": jnp.zeros((64,), jnp.float32)}
+    zo = Z.ZOConfig(mu=1e-3, n_pairs=1)
+    h, lr = 1, 1e-2
+
+    def err_vs(a, b):
+        return max(float(jnp.max(jnp.abs(x - y)))
+                   for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+    n_sweep = [n for n in (100, 1000, 10000, 100000) if n <= n_max]
+    for N in n_sweep:
+        keys = Z.fold_in_range(jax.random.PRNGKey(7), N)
+        coeffs = jax.random.normal(jax.random.PRNGKey(8), (N, h, 1))
+        flat_fn = jax.jit(lambda c, k: AG.seed_replay_aggregate(
+            params, k, c, lr, zo))
+        us_flat, out_flat = timeit(flat_fn, coeffs, keys, n=2, warmup=1)
+        sh_fn = jax.jit(lambda c, k: AG.seed_replay_aggregate(
+            params, k, c, lr, zo, shard="clients"))
+        us_sh, out_sh = timeit(sh_fn, coeffs, keys, n=2, warmup=1)
+        row(f"seed_replay_scaling/N{N}", us_sh,
+            f"devices={devs} flat_us={us_flat:.1f} "
+            f"speedup={us_flat / us_sh:.2f} "
+            f"max_err={err_vs(out_flat, out_sh):.2g}")
+
+    # donated-buffer chunked streaming at the largest N (eager outer
+    # loop: this is the O(d)-memory serving shape, not a jit candidate)
+    N = n_sweep[-1]
+    keys = Z.fold_in_range(jax.random.PRNGKey(7), N)
+    coeffs = jax.random.normal(jax.random.PRNGKey(8), (N, h, 1))
+    chunk = 4096
+    us_ch, out_ch = timeit(
+        lambda: AG.seed_replay_aggregate(params, keys, coeffs, lr, zo,
+                                         shard="clients", chunk=chunk),
+        n=2, warmup=1)
+    out_flat = jax.jit(lambda c, k: AG.seed_replay_aggregate(
+        params, k, c, lr, zo))(coeffs, keys)
+    row(f"seed_replay_scaling/N{N}_chunk{chunk}", us_ch,
+        f"devices={devs} max_err={err_vs(out_flat, out_ch):.2g}")
+
+
+# ---------------------------------------------------------------------------
 def bench_kernels():
     from repro.kernels import ops
     from repro.models import attention as A
@@ -444,6 +521,7 @@ BENCHES = {
     "table1": bench_table1, "table2": bench_table2,
     "table3": bench_table3, "fig2": bench_fig2, "fig4": bench_fig4,
     "fig6": bench_fig6, "seed_replay": bench_seed_replay,
+    "seed_replay_scaling": bench_seed_replay_scaling,
     "kernels": bench_kernels,
 }
 
@@ -474,10 +552,43 @@ def _write_json(name: str, rows) -> None:
     print(f"# wrote {path}", flush=True)
 
 
+def check_json(names) -> int:
+    """Validate BENCH_<name>.json files (CI gate): each must exist,
+    parse, carry non-empty rows with numeric ``us``, and contain no
+    */ERROR rows.  Returns a nonzero exit code on any violation."""
+    bad = 0
+    here = os.path.dirname(os.path.abspath(__file__))
+    for name in names:
+        path = os.path.join(here, f"BENCH_{name}.json")
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"CHECK FAIL {name}: {e}")
+            bad += 1
+            continue
+        rows = data.get("rows", [])
+        errs = [r for r in rows if str(r.get("name", "")).endswith("/ERROR")]
+        if not rows:
+            print(f"CHECK FAIL {name}: no rows")
+            bad += 1
+        elif errs:
+            print(f"CHECK FAIL {name}: ERROR rows {errs}")
+            bad += 1
+        elif not all(isinstance(r.get("us"), (int, float)) for r in rows):
+            print(f"CHECK FAIL {name}: non-numeric us field")
+            bad += 1
+        else:
+            print(f"CHECK OK {name}: {len(rows)} rows")
+    return bad
+
+
 def main(argv=None) -> None:
     import sys
     names = list(argv if argv is not None else sys.argv[1:]) or \
         list(BENCHES)
+    if names and names[0] == "--check":
+        raise SystemExit(check_json(names[1:] or list(BENCHES)))
     unknown = [n for n in names if n not in BENCHES]
     if unknown:
         raise SystemExit(f"unknown benchmark(s) {unknown}; "

@@ -5,8 +5,11 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import zo as Z
+from repro.distributed.sharding import shard_map_compat
 from repro.kernels import ops as O
 
 
@@ -65,9 +68,145 @@ def fedavg_masked(stacked_params, mask, prev_global):
 # seed-replay aggregation — the ZO gradient-compression uplink
 # ---------------------------------------------------------------------------
 
+def _resolve_replay_mesh(shard: str, mesh):
+    """The mesh the client axis is partitioned over.  Default: all local
+    devices on a 1-D mesh whose sole axis is ``shard``."""
+    if mesh is not None:
+        if shard not in mesh.shape:
+            raise ValueError(
+                f"replay shard axis {shard!r} not in mesh axes "
+                f"{tuple(mesh.shape)}")
+        return mesh
+    return Mesh(np.asarray(jax.devices()), (shard,))
+
+
+def _pad_leading(x, m_pad: int):
+    m = x.shape[0]
+    if m_pad == m:
+        return x
+    return jnp.pad(x, [(0, m_pad - m)] + [(0, 0)] * (x.ndim - 1))
+
+
+def _apply_acc(global_params, acc):
+    return jax.tree.map(
+        lambda p, a: (p.astype(jnp.float32) + a).astype(p.dtype),
+        global_params, acc)
+
+
+def _replay_engine(global_params, tokens, scales, make_direction,
+                   shard: str = "none", mesh=None, chunk=None):
+    """Shared reconstruction engine behind both seed-replay aggregators.
+
+    ``tokens`` is the flattened (client, step, pair) stream of replay
+    tokens — (M, 2) uint32 key data for the threefry path or (M,) int32
+    seeds for the kernel hash path — and ``scales`` the matching (M,)
+    fp32 coefficients (lr, participation mask and 1/|S| already folded
+    in, so padded entries are exact no-ops at scale 0).
+    ``make_direction(token, shapes)`` regenerates one direction tree; it
+    receives a static ShapeDtypeStruct tree, never parameter values, so
+    the same closure is legal inside ``shard_map``.
+
+    Execution modes (composable):
+
+    * ``shard="none"`` (default): one flat ``lax.scan`` — bit-identical
+      to the historical single-device behavior.
+    * ``shard=<axis>``: the token stream is padded to a device multiple
+      and partitioned over mesh axis ``<axis>`` with ``shard_map``; each
+      device scans only its own clients' sub-stream into a local fp32
+      accumulator and the partials meet in one ``psum`` tree.  Every
+      device derives directions from the same sharding-invariant token
+      stream, so the result matches the flat scan up to fp32 summation
+      order.
+    * ``chunk=<c>``: the stream is processed ``c`` entries per device at
+      a time through a donated-accumulator jitted step, so server memory
+      stays O(d) + O(c) however large the cohort is.  Unsharded chunking
+      continues the same scan carry and is bit-exact vs one-shot;
+      sharded chunking reduces per chunk (allclose, not bitwise).
+    """
+    shapes = jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), global_params)
+
+    def scan_into(acc, toks, scs):
+        def step(a, ts):
+            t, s = ts
+            u = make_direction(t, shapes)
+            return jax.tree.map(lambda ai, ul: ai + s * ul, a, u), None
+        acc, _ = jax.lax.scan(step, acc, (toks, scs))
+        return acc
+
+    def zeros_acc():
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, jnp.float32),
+                            shapes)
+
+    m = scales.shape[0]
+    if shard == "none":
+        if chunk is None:
+            return _apply_acc(global_params,
+                              scan_into(zeros_acc(), tokens, scales))
+        n_chunks = -(-m // chunk)
+        tokens = _pad_leading(tokens, n_chunks * chunk)
+        scales = _pad_leading(scales, n_chunks * chunk)
+        step_fn = jax.jit(scan_into, donate_argnums=0)
+        acc = zeros_acc()
+        for c in range(n_chunks):
+            sl = slice(c * chunk, (c + 1) * chunk)
+            acc = step_fn(acc, tokens[sl], scales[sl])
+        return _apply_acc(global_params, acc)
+
+    mesh = _resolve_replay_mesh(shard, mesh)
+    n_sh = mesh.shape[shard]
+    tok_spec = P(shard, *([None] * (tokens.ndim - 1)))
+
+    def shard_delta(toks, scs):
+        def body(tl, sl):
+            acc = scan_into(zeros_acc(), tl, sl)
+            return jax.tree.map(lambda a: jax.lax.psum(a, shard), acc)
+        return shard_map_compat(body, mesh, in_specs=(tok_spec, P(shard)),
+                                out_specs=P())(toks, scs)
+
+    if chunk is None:
+        m_pad = -(-m // n_sh) * n_sh
+        return _apply_acc(global_params,
+                          shard_delta(_pad_leading(tokens, m_pad),
+                                      _pad_leading(scales, m_pad)))
+
+    per_dev = -(-m // (n_sh * chunk)) * chunk
+    n_chunks = per_dev // chunk
+    toks = _pad_leading(tokens, per_dev * n_sh)
+    scs = _pad_leading(scales, per_dev * n_sh)
+    # device-major -> chunk-major, so each chunk is one contiguous slab
+    # holding `chunk` consecutive entries of every device's sub-stream
+    toks = jnp.moveaxis(
+        toks.reshape((n_sh, n_chunks, chunk) + toks.shape[1:]), 1, 0)
+    scs = jnp.moveaxis(scs.reshape(n_sh, n_chunks, chunk), 1, 0)
+
+    def chunk_step(acc, tc, sc):
+        d = shard_delta(tc.reshape((n_sh * chunk,) + tc.shape[2:]),
+                        sc.reshape(-1))
+        return jax.tree.map(jnp.add, acc, d)
+
+    step_fn = jax.jit(chunk_step, donate_argnums=0)
+    acc = zeros_acc()
+    for c in range(n_chunks):
+        acc = step_fn(acc, toks[c], scs[c])
+    return _apply_acc(global_params, acc)
+
+
+def _raw_key_data(keys):
+    """uint32 key data from typed or raw PRNG keys (shard_map transports
+    raw uint32; typed key arrays don't pad/reshape)."""
+    try:
+        if jnp.issubdtype(keys.dtype, jax.dtypes.prng_key):
+            return jax.random.key_data(keys)
+    except TypeError:
+        pass
+    return keys
+
+
 def seed_replay_aggregate(global_params, client_keys, client_coeffs,
                           lr: float, zo: Z.ZOConfig, mask=None,
-                          shardings=None):
+                          shardings=None, shard: str = "none", mesh=None,
+                          chunk=None):
     """Reconstruct the FedAvg'd client update from (seed, coeff) uplinks.
 
     client_keys: (N,) PRNG keys (one per client round); client_coeffs:
@@ -86,6 +225,10 @@ def seed_replay_aggregate(global_params, client_keys, client_coeffs,
     ``shardings`` (a pytree of NamedShardings matching ``global_params``)
     each regenerated direction is pinned to the parameter sharding, so
     the server-side replay never replicates a full direction in HBM.
+
+    ``shard``/``mesh``/``chunk`` select the mesh-sharded and/or chunked
+    execution modes of :func:`_replay_engine` — the default
+    ``shard="none"``, ``chunk=None`` is the historical flat scan.
     """
     n, h, n_pairs = client_coeffs.shape
     if mask is None:
@@ -96,27 +239,26 @@ def seed_replay_aggregate(global_params, client_keys, client_coeffs,
     i_idx = flat // (h * n_pairs)
     m_idx = (flat // n_pairs) % h
     p_idx = flat % n_pairs
+    client_keys = _raw_key_data(client_keys)
     keys = jax.vmap(lambda ck, m, p: jax.random.fold_in(
         jax.random.fold_in(ck, m), p))(client_keys[i_idx], m_idx, p_idx)
     scales = (-lr * client_coeffs.reshape(-1)
               * mask[i_idx] / tot).astype(jnp.float32)
 
-    def replay_one(acc, key_scale):
-        kp, s = key_scale
-        u = Z.direction_like(kp, global_params, zo, shardings)
-        acc = jax.tree.map(lambda a, ul: a + s * ul, acc, u)
-        return acc, None
+    def make_direction(kp, shapes):
+        # sharding pins only apply outside shard_map (manual axes forbid
+        # with_sharding_constraint over the same mesh)
+        sh = shardings if shard == "none" else None
+        return Z.direction_like(kp, shapes, zo, sh)
 
-    acc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
-                        global_params)
-    acc, _ = jax.lax.scan(replay_one, acc0, (keys, scales))
-    return jax.tree.map(
-        lambda p, a: (p.astype(jnp.float32) + a).astype(p.dtype),
-        global_params, acc)
+    return _replay_engine(global_params, keys, scales, make_direction,
+                          shard=shard, mesh=mesh, chunk=chunk)
 
 
 def seed_replay_aggregate_kernel(global_params, client_seeds, client_coeffs,
-                                 lr: float, mask=None, seed_pred=None):
+                                 lr: float, mask=None, seed_pred=None,
+                                 shard: str = "none", mesh=None,
+                                 chunk=None):
     """Seed-replay aggregation for the kernel noise stream.
 
     Same flattened (client, step, pair) scan as
@@ -126,8 +268,11 @@ def seed_replay_aggregate_kernel(global_params, client_seeds, client_coeffs,
     pair seed is ``fold_seed(fold_seed(client_seeds[i], m), p)`` —
     ``fold_seed`` is elementwise, so all N·h·n_pairs seeds derive in two
     vectorized mixes with no threefry dispatches at all.  Because the
-    hash noise is backend-invariant, the server regenerates bit-identical
-    directions to what the clients' kernels applied.
+    hash noise is backend- and sharding-invariant, the server regenerates
+    bit-identical directions to what the clients' kernels applied.
+
+    ``shard``/``mesh``/``chunk``: same :func:`_replay_engine` execution
+    modes as :func:`seed_replay_aggregate`.
     """
     n, h, n_pairs = client_coeffs.shape
     if mask is None:
@@ -143,19 +288,12 @@ def seed_replay_aggregate_kernel(global_params, client_seeds, client_coeffs,
     scales = (-lr * client_coeffs.reshape(-1)
               * mask[i_idx] / tot).astype(jnp.float32)
 
-    def replay_one(acc, seed_scale):
-        sp, s = seed_scale
-        u = O.kernel_direction_tree(
-            global_params, O.leaf_seed_tree(global_params, sp, seed_pred))
-        acc = jax.tree.map(lambda a, ul: a + s * ul, acc, u)
-        return acc, None
+    def make_direction(sp, shapes):
+        return O.kernel_direction_tree(
+            shapes, O.leaf_seed_tree(shapes, sp, seed_pred))
 
-    acc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
-                        global_params)
-    acc, _ = jax.lax.scan(replay_one, acc0, (seeds, scales))
-    return jax.tree.map(
-        lambda p, a: (p.astype(jnp.float32) + a).astype(p.dtype),
-        global_params, acc)
+    return _replay_engine(global_params, seeds, scales, make_direction,
+                          shard=shard, mesh=mesh, chunk=chunk)
 
 
 def seed_replay_aggregate_reference(global_params, client_keys,

@@ -351,7 +351,9 @@ def seed_replay_uplink_bytes(n_clients: int, h: int, n_pairs: int) -> int:
 def make_fed_round(api: ModelAPI, method: str, zo_cfg: Z.ZOConfig,
                    fed: FedConfig, client_opt: Optimizer,
                    server_opt: Optimizer, uplink: str = "dense",
-                   client_lr: float | None = None):
+                   client_lr: float | None = None,
+                   replay_shard: str = "none", replay_mesh=None,
+                   replay_chunk: int | None = None):
     """Returns round(state, round_batch, key) -> (state, metrics).
 
     state = {"client": global client params, "server": server params,
@@ -374,6 +376,14 @@ def make_fed_round(api: ModelAPI, method: str, zo_cfg: Z.ZOConfig,
 
     Both modes report ``uplink_bytes`` / ``uplink_bytes_dense`` metrics
     so the O(d) -> O(h·n_pairs) reduction is observable per round.
+
+    ``replay_shard``/``replay_mesh``/``replay_chunk`` configure the
+    seed-replay reconstruction's execution (see
+    :func:`repro.core.aggregate._replay_engine`): ``replay_shard``
+    partitions the client axis over that mesh axis (e.g. ``"clients"``
+    on a cohort mesh), ``replay_chunk`` streams the flattened
+    (client, step, pair) stream in donated-buffer chunks.  Defaults
+    reproduce the flat single-scan behavior bit-for-bit.
     """
     assert method in METHODS
     assert uplink in UPLINKS, uplink
@@ -490,11 +500,13 @@ def make_fed_round(api: ModelAPI, method: str, zo_cfg: Z.ZOConfig,
             if kernel_client:
                 new_client = AG.seed_replay_aggregate_kernel(
                     state["client"], client_keys, coeffs_nhp, client_lr,
-                    mask)
+                    mask, shard=replay_shard, mesh=replay_mesh,
+                    chunk=replay_chunk)
             else:
                 new_client = AG.seed_replay_aggregate(
                     state["client"], client_keys, coeffs_nhp, client_lr,
-                    zo_cfg, mask)
+                    zo_cfg, mask, shard=replay_shard, mesh=replay_mesh,
+                    chunk=replay_chunk)
             lean_bytes = seed_replay_uplink_bytes(N, h, zo_cfg.n_pairs)
         else:
             new_client = AG.fedavg_masked(cps, mask, state["client"])

@@ -29,6 +29,7 @@ MODEL_AXIS: str = "model"
 
 DEFAULT_RULES: dict[str, tuple[str, ...]] = {
     "batch": DATA_AXES,
+    "clients": DATA_AXES,      # federated client cohort (seed replay)
     "seq": (),                 # replicated by default; SP constraint opt-in
     "seq_shard": DATA_AXES,    # explicit sequence sharding (long-context decode)
     "seq_model": (MODEL_AXIS,),  # sequence-parallel residual/attention
@@ -137,6 +138,27 @@ class AxisRules:
         if self.mesh is None:
             return None
         return NamedSharding(self.mesh, self.spec_for(shape, logical))
+
+
+def shard_map_compat(f, mesh: Mesh, in_specs, out_specs,
+                     check_rep: bool = False):
+    """``shard_map`` across jax versions.
+
+    Newer jax exposes ``jax.shard_map`` (replication-check kwarg named
+    ``check_vma``); older versions only have
+    ``jax.experimental.shard_map.shard_map`` with ``check_rep``.
+    """
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        try:
+            return sm(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_vma=check_rep)
+        except TypeError:
+            return sm(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check_rep)
+    from jax.experimental.shard_map import shard_map as esm
+    return esm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_rep)
 
 
 def constrain(x: jax.Array, rules: AxisRules, logical: Sequence[str | None]) -> jax.Array:

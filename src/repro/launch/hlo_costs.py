@@ -39,6 +39,7 @@ _BATCH = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
 _CALLS = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
 _WHILE = re.compile(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
 _CONST = re.compile(r"[su]32\[\]\s+constant\((\d+)\)")
+_TRIP = re.compile(r'"known_trip_count":\s*\{\s*"n":\s*"(\d+)"')
 _GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 _GROUPS = re.compile(r"replica_groups=\{\{([^}]*)\}")
 
@@ -49,6 +50,62 @@ _SKIP_BYTES_OPS = {
     "copy-start", "copy-done", "after-all", "partition-id", "replica-id",
     "iota", "while", "conditional", "call", "fusion", "custom-call",
 }
+
+
+def _split_operands(args: str) -> list[str]:
+    """Split an instruction's operand list at top-level commas.
+
+    ``args`` is everything after ``op(`` on the instruction line; the
+    operand list ends at the matching close paren (attributes follow).
+    Commas inside shapes (``f32[256,512]{1,0}``), tuple shapes, or nested
+    parens do not split.
+    """
+    out: list[str] = []
+    cur: list[str] = []
+    dp = db = dc = 0
+    for ch in args:
+        if ch == "(":
+            dp += 1
+        elif ch == ")":
+            if dp == 0:
+                break
+            dp -= 1
+        elif ch == "[":
+            db += 1
+        elif ch == "]":
+            db -= 1
+        elif ch == "{":
+            dc += 1
+        elif ch == "}":
+            dc -= 1
+        elif ch == "," and dp == 0 and db == 0 and dc == 0:
+            out.append("".join(cur).strip())
+            cur = []
+            continue
+        cur.append(ch)
+    tail = "".join(cur).strip()
+    if tail:
+        out.append(tail)
+    return [t for t in out if t]
+
+
+_OPERAND_NAME = re.compile(r"%?([\w\.\-]+)\s*$")
+
+
+def _operands(args: str) -> list[tuple[str, str | None]]:
+    """[(name, inline_shape_or_None)] for each top-level operand.
+
+    Handles both HLO operand styles: bare names (``%arg.1``) and typed
+    operands (``f32[256,512]{1,0} %arg.1``) as emitted by newer XLA.
+    """
+    ops = []
+    for tok in _split_operands(args):
+        m = _OPERAND_NAME.search(tok)
+        if not m:
+            continue
+        inline = tok[: m.start()].strip()
+        ops.append((m.group(1), inline or None))
+    return ops
 
 
 def _shape_elems_bytes(text: str):
@@ -109,6 +166,11 @@ def parse_hlo(text: str):
         name, shape_txt, op = m.group("name"), m.group("shape"), m.group("op")
         shapes[cur][name] = shape_txt
         cc = comps[cur]
+        operands = _operands(m.group("args"))
+
+        def op_shape(nm, inline):
+            return inline if inline is not None else shapes[cur].get(nm, "")
+
         mc = _CONST.search(line)
         if mc:
             cond_consts[cur] = max(cond_consts.get(cur, 0),
@@ -117,10 +179,7 @@ def parse_hlo(text: str):
             cc.has_slice = True
         if op == "dot":
             out_e, _ = _shape_elems_bytes(shape_txt)
-            # lhs operand name
-            args = m.group("args")
-            lhs_name = args.split(",")[0].strip().lstrip("%")
-            lhs_shape = shapes[cur].get(lhs_name, "")
+            lhs_shape = op_shape(*operands[0]) if operands else ""
             dims_m = _CONTRACT.search(line)
             k = 1
             if dims_m and lhs_shape:
@@ -151,7 +210,10 @@ def parse_hlo(text: str):
         if op == "while":
             wm = _WHILE.search(line)
             if wm:
-                cc.calls.append((wm.group(2), ("while", wm.group(1))))
+                tm = _TRIP.search(line)
+                trip = int(tm.group(1)) if tm else None
+                cc.calls.append((wm.group(2),
+                                 ("while", wm.group(1), trip)))
         elif op in ("fusion", "call", "custom-call", "sort", "reduce",
                     "map", "scatter", "select-and-scatter", "reduce-window",
                     "all-reduce", "all-reduce-start"):
@@ -169,39 +231,30 @@ def parse_hlo(text: str):
         # HBM traffic approximation
         if op not in _SKIP_BYTES_OPS or op == "fusion":
             _, out_b = _shape_elems_bytes(shape_txt)
-            arg_names = []
-            for tok in m.group("args").split(","):
-                tok = tok.strip().rstrip("), ").lstrip("%")
-                nm = tok.split(" ")[0].strip("%() ")
-                if nm in shapes[cur]:
-                    arg_names.append(nm)
+            arg_shapes = [op_shape(nm, inline) for nm, inline in operands
+                          if op_shape(nm, inline)]
             if op == "fusion":
                 callee = (_CALLS.findall(line) or [None])[0]
                 is_dus = ("dynamic_update_slice" in line
                           or "dynamic-update-slice" in line)
-                ops_b = []
-                for nm in arg_names:
-                    _, b = _shape_elems_bytes(shapes[cur][nm])
-                    ops_b.append(b)
+                ops_b = [_shape_elems_bytes(s)[1] for s in arg_shapes]
                 cc.fusion_bytes.append((callee, ops_b, out_b, is_dus))
             elif op in ("dynamic-slice", "gather", "slice"):
                 cc.bytes += 2.0 * out_b          # read slice + write out
             elif op == "dynamic-update-slice":
                 upd_b = 0
-                if len(arg_names) >= 2:
-                    _, upd_b = _shape_elems_bytes(
-                        shapes[cur][arg_names[1]])
+                if len(arg_shapes) >= 2:
+                    _, upd_b = _shape_elems_bytes(arg_shapes[1])
                 cc.bytes += 2.0 * upd_b          # in-place slice update
             elif op == "scatter":
                 upd_b = 0
-                if len(arg_names) >= 3:
-                    _, upd_b = _shape_elems_bytes(
-                        shapes[cur][arg_names[2]])
+                if len(arg_shapes) >= 3:
+                    _, upd_b = _shape_elems_bytes(arg_shapes[2])
                 cc.bytes += 2.0 * upd_b
             elif op not in ("while", "conditional", "call"):
                 in_b = 0
-                for nm in arg_names:
-                    _, b = _shape_elems_bytes(shapes[cur][nm])
+                for s in arg_shapes:
+                    _, b = _shape_elems_bytes(s)
                     in_b += b
                 cc.bytes += out_b + in_b
     # resolve deferred fusion boundary bytes now that every callee's
@@ -238,7 +291,11 @@ def total_costs(text: str):
         for callee, mult in cc.calls:
             via_fusion = False
             if isinstance(mult, tuple) and mult[0] == "while":
-                trips = max(cond_consts.get(mult[1], 1), 1)
+                # prefer XLA's own known_trip_count annotation; fall back
+                # to the largest constant in the condition computation
+                known = mult[2] if len(mult) > 2 else None
+                trips = (known if known
+                         else max(cond_consts.get(mult[1], 1), 1))
             elif isinstance(mult, tuple) and mult[0] == "fusion":
                 trips = mult[1]
                 via_fusion = True

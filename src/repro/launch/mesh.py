@@ -21,3 +21,15 @@ def make_local_mesh(model_parallel: int = 1):
     n = jax.device_count()
     mp = model_parallel if n % model_parallel == 0 else 1
     return jax.make_mesh((n // mp, mp), ("data", "model"))
+
+
+def make_replay_mesh(n_devices: int | None = None):
+    """1-D cohort mesh for mesh-sharded seed-replay aggregation: the
+    ``"clients"`` axis spans all (or the first ``n_devices``) local
+    devices, so the Fed-Server replays N clients as N/n_devices
+    per-device sub-streams."""
+    devs = jax.devices()
+    if n_devices is not None:
+        devs = devs[:n_devices]
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(devs), ("clients",))

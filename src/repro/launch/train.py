@@ -25,7 +25,7 @@ from repro.core import zo as Z
 from repro.data.pipeline import place_batch
 from repro.data.synthetic import BigramLM
 from repro.distributed.sharding import AxisRules, DATA_AXES
-from repro.launch.mesh import make_local_mesh
+from repro.launch.mesh import make_local_mesh, make_replay_mesh
 from repro.models import transformer as T
 from repro.optim.optimizers import make_optimizer
 from repro.optim.schedules import warmup_cosine
@@ -63,9 +63,13 @@ def run_fed(args, cfg, api):
     sopt = make_optimizer("adamw", args.lr_server)
     fed = P.FedConfig(n_clients=args.clients, h=args.local_steps,
                       participation=args.participation)
+    replay_mesh = (make_replay_mesh() if args.replay_shard != "none"
+                   else None)
     round_fn = jax.jit(P.make_fed_round(
         api, args.method, Z.ZOConfig(mu=args.zo_mu, n_pairs=args.zo_pairs),
-        fed, copt, sopt, uplink=args.uplink, client_lr=args.lr_client))
+        fed, copt, sopt, uplink=args.uplink, client_lr=args.lr_client,
+        replay_shard=args.replay_shard, replay_mesh=replay_mesh,
+        replay_chunk=args.replay_chunk))
     params = T.init_lm(jax.random.PRNGKey(0), cfg)
     state = {"client": params["client"], "server": params["server"],
              "opt_server": sopt.init(params["server"])}
@@ -112,6 +116,14 @@ def main(argv=None):
     ap.add_argument("--uplink", default="dense", choices=list(P.UPLINKS),
                     help="client->Fed-Server weight channel "
                          "(seed_replay = lean (seed, coeff) uplink)")
+    ap.add_argument("--replay-shard", default="none",
+                    choices=["none", "clients"],
+                    help="partition seed-replay reconstruction over a "
+                         "1-D cohort mesh of all local devices")
+    ap.add_argument("--replay-chunk", type=int, default=None,
+                    help="stream the replay in donated-buffer chunks of "
+                         "this many (client, step, pair) entries per "
+                         "device — O(d) server memory for huge cohorts")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.distributed.sharding import AxisRules, constrain
+from repro.distributed.sharding import AxisRules, constrain, shard_map_compat
 from repro.models import layers as L
 from repro.models.config import ModelConfig
 
@@ -126,7 +126,6 @@ def _dispatch_compute_combine(xf, gates, idx, up, gate, down, cfg,
     buf = buf.at[slot].add(xf[tok_sorted].astype(cdt), mode="drop")
     buf = buf.reshape(E, C, d)
     if a2a_axis is not None:
-        n = jax.lax.axis_size(a2a_axis)
         buf = jax.lax.all_to_all(buf, a2a_axis, split_axis=0, concat_axis=1,
                                  tiled=True)               # (E/n, n*C, d)
     y = _expert_ffn(buf, up, gate, down, cdt, cfg.activation)
@@ -196,11 +195,10 @@ def moe_ep(params, x, cfg: ModelConfig, rules: AxisRules):
                                         cfg, a2a_axis="model")
         return out.reshape(Bl, Sl, d)
 
-    out = jax.shard_map(
-        local_fn, mesh=mesh,
+    out = shard_map_compat(
+        local_fn, mesh,
         in_specs=(P(None, None), wspec, wspec, dspec, xspec),
         out_specs=xspec,
-        check_vma=False,
     )(params["router"], params["up"], params["gate"], params["down"], x)
     out = out.astype(x.dtype)
     if "shared" in params:

@@ -96,6 +96,29 @@ def test_fedavg_in_convex_hull(n, seed):
     assert bool(jnp.all((avg["w"] >= lo) & (avg["w"] <= hi)))
 
 
+@given(st.integers(1, 9), st.integers(1, 3), st.integers(1, 3),
+       st.integers(0, 2 ** 31 - 1), st.integers(1, 12))
+@settings(**SETTINGS)
+def test_seed_replay_chunked_bit_exact(n, h, pairs, seed, chunk):
+    """For any cohort shape (n, h, n_pairs) and any chunk size, chunked
+    streaming continues the same scan carry as the one-shot replay —
+    bit-for-bit, because the fp32 add order is preserved."""
+    from repro.core.aggregate import seed_replay_aggregate
+    from repro.core.zo import ZOConfig, fold_in_range
+    params = {"w": jnp.ones((4, 3)), "b": jnp.linspace(-1.0, 1.0, 5)}
+    zo = ZOConfig(mu=1e-3, n_pairs=pairs)
+    keys = fold_in_range(jax.random.PRNGKey(seed), n)
+    coeffs = jax.random.normal(jax.random.PRNGKey(seed + 1),
+                               (n, h, pairs))
+    mask = (jax.random.uniform(jax.random.PRNGKey(seed + 2), (n,))
+            > 0.3).astype(jnp.float32)
+    one = seed_replay_aggregate(params, keys, coeffs, 1e-2, zo, mask)
+    chunked = seed_replay_aggregate(params, keys, coeffs, 1e-2, zo, mask,
+                                    chunk=chunk)
+    for a, b in zip(jax.tree.leaves(one), jax.tree.leaves(chunked)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 @given(st.integers(0, 2 ** 31 - 1))
 @settings(**SETTINGS)
 def test_lm_loss_mask_respected(seed):

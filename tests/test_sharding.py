@@ -42,3 +42,15 @@ def test_fsdp_toggle(mesh):
 def test_with_updates(mesh):
     rules = AxisRules(mesh=mesh).with_updates(d_model=DATA_AXES)
     assert rules.rules["d_model"] == DATA_AXES
+
+
+def test_clients_rule_maps_to_data_axes(mesh):
+    """The federated client cohort axis shards like batch: over the
+    data-like mesh axes (seed-replay reconstruction partitions its
+    (client, step, pair) stream this way)."""
+    from repro.distributed.sharding import DEFAULT_RULES
+    assert DEFAULT_RULES["clients"] == DATA_AXES
+    rules = AxisRules(mesh=mesh)
+    assert rules.resolve(("clients",)) == P("data")
+    # size-1 mesh axes are dropped by the divisibility check
+    assert rules.spec_for((8,), ("clients",)) == P(None)
