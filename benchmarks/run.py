@@ -472,6 +472,142 @@ def bench_seed_replay_scaling():
 
 
 # ---------------------------------------------------------------------------
+def bench_async_round():
+    """Buffered-async vs synchronous federated round under injected
+    stragglers (20% of the cohort, 10x slower) on the ResNet-18 smoke
+    config: global-update throughput per simulated second, time to the
+    first global update, and simulated time-to-loss for the event-driven
+    fleet (fast clients keep completing rounds while the straggler's
+    first round is still in flight)."""
+    import numpy as np
+
+    from repro.configs.resnet18_cifar import smoke_config
+    from repro.core import aggregate as AG
+    from repro.core import protocols as P
+    from repro.core import zo as Z
+    from repro.data.pipeline import round_batches
+    from repro.data.synthetic import GaussianMixtureImages
+    from repro.fed import (AsyncReplayServer, FleetController,
+                           StalenessConfig)
+    from repro.fed.cutplan import CutPlan, DeviceProfile
+    from repro.models import cnn as CNN
+    from repro.optim.optimizers import make_optimizer
+
+    cfg = smoke_config()
+    ds = GaussianMixtureImages(classes=10, hw=8, noise=0.8)
+    api = P.cnn_api(cfg)
+    N, h, pairs, lr, rounds = 10, 2, 2, 2e-2, 6
+    zo = Z.ZOConfig(mu=1e-3, n_pairs=pairs)
+    fed = P.FedConfig(n_clients=N, h=h)
+    copt = make_optimizer("zo_sgd", lr)
+    sopt = make_optimizer("adamw", 2e-3)
+    durations = np.ones(N)
+    durations[-max(N // 5, 1):] = 10.0      # 20% stragglers, 10x slower
+    makespan = float(durations.max())
+    params = CNN.init_cnn(jax.random.PRNGKey(0), cfg)
+    state0 = {"client": params["client"], "server": params["server"],
+              "opt_server": sopt.init(params["server"])}
+    held = ds.batch(jax.random.PRNGKey(12345), 256)
+    held_loss = jax.jit(lambda cp: api.client_loss(cp, held)[0])
+
+    # --- synchronous barrier baseline (same lean uplink) -------------
+    sync_rnd = jax.jit(P.make_fed_round(
+        api, "heron", zo, fed, copt, sopt, uplink="seed_replay",
+        client_lr=lr))
+    state = state0
+    sync_curve = []
+    t0 = time.perf_counter()
+    for r in range(rounds):
+        rb = round_batches(ds, jax.random.PRNGKey(r), N, h, 16)
+        state, m = sync_rnd(state, rb, jax.random.PRNGKey(1000 + r))
+        sync_curve.append(((r + 1) * makespan,
+                           float(held_loss(state["client"]))))
+    us_sync = (time.perf_counter() - t0) / rounds * 1e6
+    sync_tput = 1.0 / makespan              # one global update per round
+    row("async_round/sync", us_sync,
+        f"updates_per_sim_s={sync_tput:.3g} "
+        f"time_to_first_update_s={makespan:.3g} "
+        f"loss_after_{rounds}_rounds={sync_curve[-1][1]:.4f}")
+
+    # --- buffered-async engine (eager orchestration: not a jit
+    #     candidate — it drives jitted cohort/replay pieces) ----------
+    async_rnd = P.make_async_round(api, "heron", zo, fed, copt, sopt,
+                                   client_lr=lr, staleness_alpha=0.5,
+                                   buffer_k=4)
+    state = state0
+    t0 = time.perf_counter()
+    m = {}
+    for r in range(rounds):
+        rb = round_batches(ds, jax.random.PRNGKey(r), N, h, 16)
+        state, m = async_rnd(state, rb, jax.random.PRNGKey(1000 + r),
+                             durations=durations)
+    us_async = (time.perf_counter() - t0) / rounds * 1e6
+    speedup = m["updates_per_sim_s"] / sync_tput
+    row("async_round/async_buffer4", us_async,
+        f"updates_per_sim_s={m['updates_per_sim_s']:.3g} "
+        f"speedup_vs_sync={speedup:.2f} (gate: >=1.5) "
+        f"flushes={m['flushes']:.0f} "
+        f"mean_staleness={m['mean_staleness']:.2f} "
+        f"time_to_first_update_s={m['time_to_first_update_s']:.3g} "
+        f"loss_after_{rounds}_rounds="
+        f"{float(held_loss(state['client'])):.4f}")
+
+    # --- event-driven fleet: simulated time-to-loss ------------------
+    # target = what the sync barrier reaches after `rounds` rounds; the
+    # async fleet keeps fast clients busy while stragglers are in
+    # flight, so it should cross the target in far less simulated time.
+    target = sync_curve[-1][1]
+    t_sync = next(t for t, l in sync_curve if l <= target)
+
+    @jax.jit
+    def local_round(cp, ck, batches):
+        def step_m(cp, xs):
+            m_, bm = xs
+            g, info = Z.zo_gradient(lambda p: api.client_loss(p, bm),
+                                    cp, jax.random.fold_in(ck, m_), zo)
+            return Z.add_scaled(cp, g, -lr), info["coeffs"]
+
+        _, coeffs = jax.lax.scan(step_m, cp, (jnp.arange(h), batches))
+        return coeffs
+
+    def local_fn(global_params, cid, round_idx, base_version):
+        ck = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(11), round_idx), cid)
+        batches = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[ds.batch(jax.random.fold_in(ck, 900 + m_), 16)
+              for m_ in range(h)])
+        coeffs = local_round(global_params, ck, batches)
+        return AG._raw_key_data(ck), coeffs, 1.0
+
+    server = AsyncReplayServer(params["client"], lr, zo,
+                               staleness=StalenessConfig(alpha=0.5),
+                               buffer_k=4)
+    reached = []
+
+    def on_flush(cids, t):
+        if not reached and float(held_loss(server.params)) <= target:
+            reached.append(t)
+
+    server.on_flush = on_flush
+    ctl = FleetController(server, local_fn, sleep=lambda s: None)
+    prof = DeviceProfile("bench", 1e9, 1e9, 1e12)
+    for d in durations:
+        ctl.admit(prof, CutPlan(cut=cfg.client_blocks, round_s=float(d),
+                                feasible=True))
+    budget = 6 * rounds * N                  # completion cap, not time
+    while not reached and ctl.telemetry.completed < budget:
+        ctl.run(N)
+    t_async = reached[0] if reached else float("inf")
+    row("async_round/fleet_time_to_loss", 0.0,
+        f"target_loss={target:.4f} sync_s={t_sync:.3g} "
+        f"async_s={t_async:.3g} "
+        f"speedup={t_sync / t_async:.2f} "
+        f"completions={ctl.telemetry.completed} "
+        f"flushes={server.telemetry.flushes}")
+
+
+# ---------------------------------------------------------------------------
 def bench_kernels():
     from repro.kernels import ops
     from repro.models import attention as A
@@ -522,6 +658,7 @@ BENCHES = {
     "table3": bench_table3, "fig2": bench_fig2, "fig4": bench_fig4,
     "fig6": bench_fig6, "seed_replay": bench_seed_replay,
     "seed_replay_scaling": bench_seed_replay_scaling,
+    "async_round": bench_async_round,
     "kernels": bench_kernels,
 }
 

@@ -203,6 +203,62 @@ def _raw_key_data(keys):
     return keys
 
 
+def replay_token_stream(client_keys, client_coeffs, lr: float, weights,
+                        tot, kernel: bool = False):
+    """Flatten a cohort's lean uplinks into the (tokens, scales) stream
+    :func:`_replay_engine` consumes.
+
+    ``client_keys``: (N,) PRNG keys (threefry path) or int32 seeds
+    (``kernel=True``); ``client_coeffs``: (N, h, n_pairs);  ``weights``:
+    (N,) fp32 per-client multipliers — the participation mask with any
+    staleness weight already folded in (a weight of exactly 1.0 or 0.0
+    is a bit-exact no-op on the scales);  ``tot``: the normalizer
+    (participant count for FedAvg semantics).
+
+    This is THE canonical flattening: both synchronous aggregators and
+    the async engine (:mod:`repro.fed.async_engine`) call it, so a
+    buffered flush over the same cohort in client order produces
+    bit-identical tokens and scales to the one-shot synchronous path.
+    """
+    n, h, n_pairs = client_coeffs.shape
+    flat = jnp.arange(n * h * n_pairs)
+    i_idx = flat // (h * n_pairs)
+    m_idx = (flat // n_pairs) % h
+    p_idx = flat % n_pairs
+    if kernel:
+        tokens = O.fold_seed(O.fold_seed(
+            jnp.asarray(client_keys, jnp.int32)[i_idx], m_idx), p_idx)
+    else:
+        ck = _raw_key_data(client_keys)
+        tokens = jax.vmap(lambda c, m, p: jax.random.fold_in(
+            jax.random.fold_in(c, m), p))(ck[i_idx], m_idx, p_idx)
+    scales = (-lr * client_coeffs.reshape(-1)
+              * weights[i_idx] / tot).astype(jnp.float32)
+    return tokens, scales
+
+
+def threefry_direction_builder(zo: Z.ZOConfig, shardings=None,
+                               shard: str = "none"):
+    """``make_direction`` closure for the threefry token stream (shared
+    by :func:`seed_replay_aggregate` and the async engine)."""
+    def make_direction(kp, shapes):
+        # sharding pins only apply outside shard_map (manual axes forbid
+        # with_sharding_constraint over the same mesh)
+        sh = shardings if shard == "none" else None
+        return Z.direction_like(kp, shapes, zo, sh)
+
+    return make_direction
+
+
+def kernel_direction_builder(seed_pred=None):
+    """``make_direction`` closure for the int32 hash-seed stream."""
+    def make_direction(sp, shapes):
+        return O.kernel_direction_tree(
+            shapes, O.leaf_seed_tree(shapes, sp, seed_pred))
+
+    return make_direction
+
+
 def seed_replay_aggregate(global_params, client_keys, client_coeffs,
                           lr: float, zo: Z.ZOConfig, mask=None,
                           shardings=None, shard: str = "none", mesh=None,
@@ -230,27 +286,13 @@ def seed_replay_aggregate(global_params, client_keys, client_coeffs,
     execution modes of :func:`_replay_engine` — the default
     ``shard="none"``, ``chunk=None`` is the historical flat scan.
     """
-    n, h, n_pairs = client_coeffs.shape
+    n = client_coeffs.shape[0]
     if mask is None:
         mask = jnp.ones((n,), jnp.float32)
     tot = jnp.maximum(jnp.sum(mask), 1.0)
-
-    flat = jnp.arange(n * h * n_pairs)
-    i_idx = flat // (h * n_pairs)
-    m_idx = (flat // n_pairs) % h
-    p_idx = flat % n_pairs
-    client_keys = _raw_key_data(client_keys)
-    keys = jax.vmap(lambda ck, m, p: jax.random.fold_in(
-        jax.random.fold_in(ck, m), p))(client_keys[i_idx], m_idx, p_idx)
-    scales = (-lr * client_coeffs.reshape(-1)
-              * mask[i_idx] / tot).astype(jnp.float32)
-
-    def make_direction(kp, shapes):
-        # sharding pins only apply outside shard_map (manual axes forbid
-        # with_sharding_constraint over the same mesh)
-        sh = shardings if shard == "none" else None
-        return Z.direction_like(kp, shapes, zo, sh)
-
+    keys, scales = replay_token_stream(client_keys, client_coeffs, lr,
+                                       mask, tot)
+    make_direction = threefry_direction_builder(zo, shardings, shard)
     return _replay_engine(global_params, keys, scales, make_direction,
                           shard=shard, mesh=mesh, chunk=chunk)
 
@@ -274,24 +316,13 @@ def seed_replay_aggregate_kernel(global_params, client_seeds, client_coeffs,
     ``shard``/``mesh``/``chunk``: same :func:`_replay_engine` execution
     modes as :func:`seed_replay_aggregate`.
     """
-    n, h, n_pairs = client_coeffs.shape
+    n = client_coeffs.shape[0]
     if mask is None:
         mask = jnp.ones((n,), jnp.float32)
     tot = jnp.maximum(jnp.sum(mask), 1.0)
-
-    flat = jnp.arange(n * h * n_pairs)
-    i_idx = flat // (h * n_pairs)
-    m_idx = (flat // n_pairs) % h
-    p_idx = flat % n_pairs
-    seeds = O.fold_seed(O.fold_seed(
-        jnp.asarray(client_seeds, jnp.int32)[i_idx], m_idx), p_idx)
-    scales = (-lr * client_coeffs.reshape(-1)
-              * mask[i_idx] / tot).astype(jnp.float32)
-
-    def make_direction(sp, shapes):
-        return O.kernel_direction_tree(
-            shapes, O.leaf_seed_tree(shapes, sp, seed_pred))
-
+    seeds, scales = replay_token_stream(client_seeds, client_coeffs, lr,
+                                        mask, tot, kernel=True)
+    make_direction = kernel_direction_builder(seed_pred)
     return _replay_engine(global_params, seeds, scales, make_direction,
                           shard=shard, mesh=mesh, chunk=chunk)
 

@@ -20,6 +20,7 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import aggregate as AG
 from repro.core import zo as Z
@@ -275,6 +276,39 @@ def make_prefill_step(cfg: ModelConfig, rules: AxisRules):
     return prefill
 
 
+def make_cached_prefill_step(cfg: ModelConfig, rules: AxisRules):
+    """Block prefill for serving: one forward over the whole prompt
+    (``decode=False``) that *writes* the KV / recurrent caches, so decode
+    continues at ``pos = prompt_len``.  Returns
+    ``prefill(params, caches, tokens) -> (logits, caches)``; caches must
+    be fresh (``init_serve_caches``, pos 0).  Decoder-only archs — the
+    enc-dec decoder needs its cross-attended token loop."""
+    from repro.models import layers as L
+
+    if cfg.enc_dec:
+        raise ValueError("cached block prefill is decoder-only; enc-dec "
+                         "serving prefills token-by-token")
+
+    def prefill(params, caches, tokens):
+        x = T.embed_inputs(params["client"], cfg, tokens)
+        x, cc = T.apply_stack(params["client"]["layers"], x, cfg, rules,
+                              T.client_specs(cfg), caches=caches["client"],
+                              decode=False)
+        x, sc = T.apply_stack(params["server"]["layers"], x, cfg, rules,
+                              T.server_specs(cfg), caches=caches["server"],
+                              decode=False)
+        x = T._norm(cfg, params["server"]["final_norm"], x)
+        if cfg.tie_embeddings:
+            logits = L.unembed(params["client"]["embed"], x, jnp.float32)
+        else:
+            logits = x.astype(jnp.float32) @ params["server"][
+                "unembed"].astype(jnp.float32)
+        return (L.softcap(logits, cfg.final_softcap),
+                {"client": cc, "server": sc})
+
+    return prefill
+
+
 def init_serve_caches(cfg: ModelConfig, batch: int, seq: int):
     if cfg.enc_dec:
         return {
@@ -348,6 +382,132 @@ def seed_replay_uplink_bytes(n_clients: int, h: int, n_pairs: int) -> int:
     return n_clients * (h * n_pairs * 4 + 8)
 
 
+def _make_local_update(api: ModelAPI, method: str, zo_cfg: Z.ZOConfig,
+                       client_opt: Optimizer, uplink: str,
+                       client_lr, kernel_client: bool):
+    """One client's local step — shared by the sync and async rounds."""
+    def local_update(cp, oc, batch, key):
+        def closs(cpx):
+            return api.client_loss(cpx, batch)
+
+        if method == "heron":
+            if kernel_client:
+                def dloss(cpx, seeds, mu):
+                    return api.client_dual_loss(cpx, batch, seeds, mu)
+
+                g, info = Z.zo_gradient_kernel(dloss, cp, key, zo_cfg)
+            else:
+                g, info = Z.zo_gradient(closs, cp, key, zo_cfg)
+            loss, smashed = info["loss"], info["aux"]
+            coeffs = info["coeffs"]
+            if uplink == "seed_replay":
+                cp = Z.add_scaled(cp, g, -client_lr)
+            else:
+                cp, oc = client_opt.update(g, oc, cp)
+        else:
+            (loss, smashed), g = jax.value_and_grad(closs, has_aux=True)(cp)
+            coeffs = jnp.zeros((zo_cfg.n_pairs,))
+            cp, oc = client_opt.update(g, oc, cp)
+        return cp, oc, smashed, loss, coeffs
+
+    return local_update
+
+
+def _make_cohort_trajectory(api: ModelAPI, method: str, zo_cfg: Z.ZOConfig,
+                            fed: FedConfig, client_opt: Optimizer,
+                            uplink: str, client_lr):
+    """The client side of a round: h decoupled local steps vmapped over
+    the N-client cohort.  Factored out of :func:`make_fed_round` so the
+    async engine (:func:`make_async_round`) reuses the *identical* jitted
+    trajectory — same key stream, same scan order — which is what makes
+    the async path bit-exact against the sync one at zero staleness.
+
+    Returns ``(run, kernel_client)`` where
+    ``run(state_client, round_batch, key) ->
+    (client_keys, cps, smashed_all, losses, coeffs_all)``.
+    """
+    kernel_client = api.client_dual_loss is not None and method == "heron"
+    local_update = _make_local_update(api, method, zo_cfg, client_opt,
+                                      uplink, client_lr, kernel_client)
+
+    def run(state_client, round_batch, key):
+        N, h = fed.n_clients, fed.h
+        cp0 = jax.tree.map(
+            lambda p: jnp.broadcast_to(p[None], (N,) + p.shape),
+            state_client)
+        oc0 = jax.vmap(client_opt.init)(cp0)
+        # one base key per client; local step m folds m on top and
+        # zo_gradient folds the pair index on top of that — the same
+        # (client, step, pair) stream seed_replay_aggregate re-derives.
+        if kernel_client:
+            client_keys = O.fold_seed(Z.seed_from_key(key), jnp.arange(N))
+        else:
+            client_keys = Z.fold_in_range(key, N)
+
+        def step_m(carry, m):
+            cps, ocs = carry
+            batch_m = jax.tree.map(lambda x: jnp.take(x, m, axis=1),
+                                   round_batch)
+            if kernel_client:
+                keys = O.fold_seed(client_keys, m)
+            else:
+                keys = jax.vmap(
+                    lambda ck: jax.random.fold_in(ck, m))(client_keys)
+            cps, ocs, smashed, losses, coeffs = jax.vmap(
+                local_update, in_axes=(0, 0, 0, 0))(cps, ocs, batch_m,
+                                                    keys)
+            return (cps, ocs), (smashed, losses, coeffs)
+
+        (cps, _), (smashed_all, losses, coeffs_all) = jax.lax.scan(
+            step_m, (cp0, oc0), jnp.arange(h))
+        return client_keys, cps, smashed_all, losses, coeffs_all
+
+    return run, kernel_client
+
+
+def _make_server_updates(api: ModelAPI, fed: FedConfig,
+                         server_opt: Optimizer):
+    """Sequential SFLV2-style server FO updates over a set of clients.
+
+    ``apply(sp, os_, cp_const, round_batch, smashed_all, cids)`` runs,
+    for every upload step m, one scan over the client ids in ``cids``
+    (an int array — ``jnp.arange(N)`` reproduces the historical sync
+    behavior; the async engine passes each flush's arrivals instead).
+    """
+    upload_ms = [m for m in range(fed.h) if m % fed.upload_every == 0]
+
+    def apply(sp, os_, cp_const, round_batch, smashed_all, cids):
+        s_losses = []
+        for m in upload_ms:
+            batch_m = jax.tree.map(lambda x: x[:, m], round_batch)
+            smashed_m = jax.tree.map(lambda s: s[m], smashed_all)
+            if fed.quantize_uplink:
+                from repro.core.split import (dequantize_smashed,
+                                              quantize_smashed)
+                qm, sc = quantize_smashed(smashed_m)
+                smashed_m = dequantize_smashed(qm, sc, smashed_m.dtype)
+
+            def server_client_step(carry, i):
+                spx, osx = carry
+                sm = jax.tree.map(lambda s: jnp.take(s, i, axis=0),
+                                  smashed_m)
+                bt = jax.tree.map(lambda x: jnp.take(x, i, axis=0),
+                                  batch_m)
+                sl, g = jax.value_and_grad(
+                    lambda p: api.server_loss(p, cp_const,
+                                              jax.lax.stop_gradient(sm),
+                                              bt))(spx)
+                spx, osx = server_opt.update(g, osx, spx)
+                return (spx, osx), sl
+
+            (sp, os_), sls = jax.lax.scan(server_client_step, (sp, os_),
+                                          cids)
+            s_losses.append(sls)
+        return sp, os_, s_losses
+
+    return apply
+
+
 def make_fed_round(api: ModelAPI, method: str, zo_cfg: Z.ZOConfig,
                    fed: FedConfig, client_opt: Optimizer,
                    server_opt: Optimizer, uplink: str = "dense",
@@ -394,102 +554,22 @@ def make_fed_round(api: ModelAPI, method: str, zo_cfg: Z.ZOConfig,
         if client_lr is None:
             raise ValueError("seed_replay uplink needs client_lr: the "
                              "Fed-Server replays plain-SGD local steps")
-    # kernel noise stream: clients run the fused dual-probe forward and
-    # the whole (client, step, pair) seed chain is int32 fold_seed hashes
-    # instead of threefry keys — the Fed-Server replays it bit-identically
-    # with seed_replay_aggregate_kernel.
-    kernel_client = api.client_dual_loss is not None and method == "heron"
-
-    def local_update(cp, oc, batch, key):
-        def closs(cpx):
-            return api.client_loss(cpx, batch)
-
-        if method == "heron":
-            if kernel_client:
-                def dloss(cpx, seeds, mu):
-                    return api.client_dual_loss(cpx, batch, seeds, mu)
-
-                g, info = Z.zo_gradient_kernel(dloss, cp, key, zo_cfg)
-            else:
-                g, info = Z.zo_gradient(closs, cp, key, zo_cfg)
-            loss, smashed = info["loss"], info["aux"]
-            coeffs = info["coeffs"]
-            if uplink == "seed_replay":
-                cp = Z.add_scaled(cp, g, -client_lr)
-            else:
-                cp, oc = client_opt.update(g, oc, cp)
-        else:
-            (loss, smashed), g = jax.value_and_grad(closs, has_aux=True)(cp)
-            coeffs = jnp.zeros((zo_cfg.n_pairs,))
-            cp, oc = client_opt.update(g, oc, cp)
-        return cp, oc, smashed, loss, coeffs
+    run_cohort, kernel_client = _make_cohort_trajectory(
+        api, method, zo_cfg, fed, client_opt, uplink, client_lr)
+    server_updates = _make_server_updates(api, fed, server_opt)
 
     def round_fn(state, round_batch, key):
         N, h = fed.n_clients, fed.h
-        cp0 = jax.tree.map(
-            lambda p: jnp.broadcast_to(p[None], (N,) + p.shape),
-            state["client"])
-        oc0 = jax.vmap(client_opt.init)(cp0)
-
         if method in ("sflv1", "sflv2", "splitlora"):
             return _fo_locked_round(api, method, fed, client_opt,
                                     server_opt, state, round_batch, key)
 
-        # one base key per client; local step m folds m on top and
-        # zo_gradient folds the pair index on top of that — the same
-        # (client, step, pair) stream seed_replay_aggregate re-derives.
-        if kernel_client:
-            client_keys = O.fold_seed(Z.seed_from_key(key), jnp.arange(N))
-        else:
-            client_keys = Z.fold_in_range(key, N)
-
-        def step_m(carry, m):
-            cps, ocs = carry
-            batch_m = jax.tree.map(lambda x: jnp.take(x, m, axis=1),
-                                   round_batch)
-            if kernel_client:
-                keys = O.fold_seed(client_keys, m)
-            else:
-                keys = jax.vmap(
-                    lambda ck: jax.random.fold_in(ck, m))(client_keys)
-            cps, ocs, smashed, losses, coeffs = jax.vmap(
-                local_update, in_axes=(0, 0, 0, 0))(cps, ocs, batch_m,
-                                                    keys)
-            return (cps, ocs), (smashed, losses, coeffs)
-
-        (cps, _), (smashed_all, losses, coeffs_all) = jax.lax.scan(
-            step_m, (cp0, oc0), jnp.arange(h))
-        # uploads every k local steps (static selection)
-        upload_ms = [m for m in range(h) if m % fed.upload_every == 0]
-        sp, os_ = state["server"], state["opt_server"]
-        s_losses = []
+        client_keys, cps, smashed_all, losses, coeffs_all = run_cohort(
+            state["client"], round_batch, key)
         cp_const = jax.lax.stop_gradient(state["client"])
-        for m in upload_ms:
-            batch_m = jax.tree.map(lambda x: x[:, m], round_batch)
-            smashed_m = jax.tree.map(lambda s: s[m], smashed_all)
-            if fed.quantize_uplink:
-                from repro.core.split import (dequantize_smashed,
-                                              quantize_smashed)
-                qm, sc = quantize_smashed(smashed_m)
-                smashed_m = dequantize_smashed(qm, sc,
-                                               smashed_m.dtype)
-
-            def server_client_step(carry, i):
-                spx, osx = carry
-                sm = jax.tree.map(lambda s: jnp.take(s, i, axis=0),
-                                  smashed_m)
-                bt = jax.tree.map(lambda x: jnp.take(x, i, axis=0),
-                                  batch_m)
-                sl, g = jax.value_and_grad(
-                    lambda p: api.server_loss(p, cp_const,
-                                              jax.lax.stop_gradient(sm),
-                                              bt))(spx)
-                spx, osx = server_opt.update(g, osx, spx)
-                return (spx, osx), sl
-
-            (sp, os_), sls = jax.lax.scan(server_client_step, (sp, os_),
-                                          jnp.arange(N))
-            s_losses.append(sls)
+        sp, os_, s_losses = server_updates(
+            state["server"], state["opt_server"], cp_const, round_batch,
+            smashed_all, jnp.arange(N))
         # Fed-Server aggregation with participation / stragglers
         mask = AG.straggler_mask(jax.random.fold_in(key, 777), N,
                                  fed.participation, fed.straggler_prob)
@@ -518,6 +598,120 @@ def make_fed_round(api: ModelAPI, method: str, zo_cfg: Z.ZOConfig,
                    "uplink_bytes_dense": jnp.asarray(dense_bytes,
                                                      jnp.float32)}
         return ({"client": new_client, "server": sp, "opt_server": os_},
+                metrics)
+
+    return round_fn
+
+
+def make_async_round(api: ModelAPI, method: str, zo_cfg: Z.ZOConfig,
+                     fed: FedConfig, client_opt: Optimizer,
+                     server_opt: Optimizer, client_lr: float,
+                     staleness_alpha: float = 0.0, buffer_k: int = 0,
+                     replay_shard: str = "none", replay_mesh=None,
+                     replay_chunk: int | None = None):
+    """Buffered-async federated round (FedBuff-style) over the lean
+    seed-replay uplink.
+
+    The client side is *literally* the synchronous trajectory — the same
+    :func:`_make_cohort_trajectory` scan ``make_fed_round`` uses, so
+    coefficients and smashed data are bit-identical — but the Fed-Server
+    incorporates arrivals through
+    :class:`repro.fed.async_engine.AsyncReplayServer`: completion order
+    is the stable sort of per-client ``durations``, the buffer snapshots
+    a new global every ``buffer_k`` arrivals, and every entry is
+    staleness-weighted ``w(τ) = (1+τ)^(-α)`` with ``τ`` counted in
+    snapshots taken since the client pulled its base model.
+
+    ``buffer_k=0`` is the barrier limit — one flush holding the whole
+    cohort — and is **bit-exact** against ``make_fed_round(uplink=
+    "seed_replay")``: the flush re-derives the identical token/scale
+    stream (shared :func:`repro.core.aggregate.replay_token_stream`) and
+    the per-flush server FO updates run over the flushed clients in
+    client-id order, matching the sync (upload-step, client) scan order.
+
+    Returns ``round(state, round_batch, key, durations=None) ->
+    (state, metrics)``.  ``durations`` is an optional (N,) array of
+    per-client round times — e.g. :func:`repro.fed.cutplan.round_time_s`
+    estimates for a heterogeneous fleet — driving arrival order and the
+    simulated-time metrics (``sim_makespan_s``,
+    ``time_to_first_update_s``, ``updates_per_sim_s``).  Heterogeneous
+    *cuts* enter this simulation through those durations; the cohort
+    math executes at the config's shared cut (per-client parameter
+    shapes cannot share one vmapped trajectory).
+    """
+    from repro.fed.async_engine import AsyncReplayServer, StalenessConfig
+
+    if method != "heron":
+        raise ValueError("the async round rides the seed-replay uplink, "
+                         "which needs the forward-only ZO client "
+                         f"(method='heron'); got {method!r}")
+    if client_lr is None:
+        raise ValueError("async round needs client_lr: the Fed-Server "
+                         "replays plain-SGD local steps")
+    run_cohort, kernel_client = _make_cohort_trajectory(
+        api, method, zo_cfg, fed, client_opt, "seed_replay", client_lr)
+    server_updates = _make_server_updates(api, fed, server_opt)
+
+    def round_fn(state, round_batch, key, durations=None):
+        N, h = fed.n_clients, fed.h
+        client_keys, cps, smashed_all, losses, coeffs_all = run_cohort(
+            state["client"], round_batch, key)
+        coeffs_nhp = jnp.transpose(coeffs_all, (1, 0, 2))
+        mask = AG.straggler_mask(jax.random.fold_in(key, 777), N,
+                                 fed.participation, fed.straggler_prob)
+        if durations is None:
+            durations = np.ones((N,))
+        durations = np.asarray(durations, np.float64)
+        order = np.argsort(durations, kind="stable")
+
+        sp, os_ = state["server"], state["opt_server"]
+        s_losses = []
+        cp_const = jax.lax.stop_gradient(state["client"])
+
+        def on_flush(cids, t):
+            nonlocal sp, os_
+            sp, os_, sls = server_updates(
+                sp, os_, cp_const, round_batch, smashed_all,
+                jnp.asarray(cids, jnp.int32))
+            s_losses.extend(sls)
+
+        srv = AsyncReplayServer(
+            state["client"], client_lr, zo_cfg, kernel=kernel_client,
+            staleness=StalenessConfig(alpha=staleness_alpha),
+            buffer_k=buffer_k, shard=replay_shard, mesh=replay_mesh,
+            chunk=replay_chunk, on_flush=on_flush)
+
+        tokens_host = np.asarray(client_keys) if kernel_client \
+            else np.asarray(AG._raw_key_data(client_keys))
+        mask_host = np.asarray(mask)
+        for cid in order:
+            cid = int(cid)
+            srv.submit(cid, tokens_host[cid], coeffs_nhp[cid],
+                       base_version=0, mask=float(mask_host[cid]),
+                       t_done=float(durations[cid]))
+        srv.flush()
+
+        tel = srv.telemetry
+        makespan = float(durations.max()) if N else 0.0
+        last_t = tel.flush_times[-1] if tel.flush_times else makespan
+        metrics = {
+            "client_loss": jnp.mean(losses),
+            "server_loss": jnp.mean(jnp.concatenate(
+                [jnp.reshape(s, (-1,)) for s in s_losses])),
+            "participants": jnp.sum(mask),
+            "uplink_bytes": jnp.asarray(
+                seed_replay_uplink_bytes(N, h, zo_cfg.n_pairs),
+                jnp.float32),
+            "uplink_bytes_dense": jnp.asarray(
+                N * param_bytes(state["client"]), jnp.float32),
+            "flushes": float(tel.flushes),
+            "mean_staleness": float(tel.mean_staleness),
+            "sim_makespan_s": makespan,
+            "time_to_first_update_s": float(
+                tel.flush_times[0]) if tel.flush_times else makespan,
+            "updates_per_sim_s": tel.flushes / max(last_t, 1e-9),
+        }
+        return ({"client": srv.params, "server": sp, "opt_server": os_},
                 metrics)
 
     return round_fn

@@ -48,21 +48,46 @@ def remesh(model_parallel: int = 1):
     return jax.make_mesh((n // mp, mp), ("data", "model"))
 
 
+def backoff_s(attempt: int, base: float = 0.05, cap: float = 1.0) -> float:
+    """Bounded exponential backoff: base·2^(attempt-1), capped.  Shared
+    by :func:`run_resilient` and the fleet controller's retry loop."""
+    return min(cap, base * (2.0 ** max(attempt - 1, 0)))
+
+
+@dataclasses.dataclass
+class RestartTelemetry:
+    """What the resilience loop did: how often it restarted, where it
+    resumed from, and how long it backed off in total."""
+    restarts: int = 0
+    from_checkpoint: int = 0
+    from_start: int = 0
+    backoff_total_s: float = 0.0
+    resumed_at: list = dataclasses.field(default_factory=list)
+
+
 def run_resilient(step_fn: Callable, state, batch_fn: Callable,
                   n_steps: int, ckpt_dir: str, ckpt_every: int = 10,
                   injector: FaultInjector | None = None,
-                  max_retries: int = 5, start_step: int = 0):
+                  max_retries: int = 5, start_step: int = 0,
+                  backoff_base_s: float = 0.05, backoff_cap_s: float = 1.0,
+                  sleep: Callable = time.sleep):
     """Run ``n_steps`` of ``state, metrics = step_fn(state, batch)`` with
     checkpoint/replay on failure.
 
     ``batch_fn(step) -> batch`` must be deterministic in ``step`` (replay
-    exactness).  Returns (state, last_metrics, n_restarts).
+    exactness).  On failure the loop backs off exponentially
+    (``backoff_s(attempt, backoff_base_s, backoff_cap_s)``) and resumes
+    from the latest checkpoint — or, when none exists yet, resets to the
+    initial ``(state, start_step)`` and replays from the start against
+    the same deterministic streams.  Returns
+    ``(state, last_metrics, RestartTelemetry)``.
     """
     step = start_step
+    state0 = state                   # replay anchor before any checkpoint
     restored = CKPT.latest_step(ckpt_dir)
     if restored is not None:
         state, step = CKPT.restore(ckpt_dir, state)
-    restarts = 0
+    tel = RestartTelemetry()
     metrics = {}
     while step < n_steps:
         try:
@@ -73,12 +98,21 @@ def run_resilient(step_fn: Callable, state, batch_fn: Callable,
             if step % ckpt_every == 0:
                 CKPT.save(ckpt_dir, step, state)
         except Exception:
-            restarts += 1
-            if restarts > max_retries:
+            tel.restarts += 1
+            if tel.restarts > max_retries:
                 raise
+            wait = backoff_s(tel.restarts, backoff_base_s, backoff_cap_s)
+            tel.backoff_total_s += wait
+            sleep(wait)
             last = CKPT.latest_step(ckpt_dir)
             if last is not None:
                 state, step = CKPT.restore(ckpt_dir, state)
-            # else: replay from start_step with the same streams
+                tel.from_checkpoint += 1
+            else:
+                # no checkpoint yet: replay from start_step for real —
+                # both the state AND the step counter reset
+                state, step = state0, start_step
+                tel.from_start += 1
+            tel.resumed_at.append(step)
     CKPT.save(ckpt_dir, step, state)
-    return state, metrics, restarts
+    return state, metrics, tel

@@ -1,0 +1,28 @@
+"""Async/elastic federated subsystem (ROADMAP item 3).
+
+* :mod:`repro.fed.async_engine` — buffered-async Fed-Server applying
+  staleness-weighted seed-replay updates as they arrive (FedBuff-style
+  snapshot every K arrivals) through the existing
+  :func:`repro.core.aggregate._replay_engine`.
+* :mod:`repro.fed.controller` — event-driven elastic fleet loop: clients
+  join/drop mid-round, faults restart with bounded backoff
+  (:mod:`repro.distributed.fault` drills), the mesh re-forms on fleet
+  changes.
+* :mod:`repro.fed.cutplan` — profile-driven cut-layer selection at
+  admission time from compiled-HLO FLOPs/bytes costs
+  (AdaptSFL, arXiv:2403.13101).
+"""
+from repro.fed.async_engine import (AsyncReplayServer, AsyncTelemetry,
+                                    StalenessConfig, staleness_weight)
+from repro.fed.controller import (FleetClient, FleetController,
+                                  FleetTelemetry)
+from repro.fed.cutplan import (CutCost, CutPlan, DeviceProfile, PROFILES,
+                               candidate_costs, cut_candidates, plan_cut,
+                               plan_fleet, round_time_s)
+
+__all__ = [
+    "AsyncReplayServer", "AsyncTelemetry", "StalenessConfig",
+    "staleness_weight", "FleetClient", "FleetController", "FleetTelemetry",
+    "CutCost", "CutPlan", "DeviceProfile", "PROFILES", "candidate_costs",
+    "cut_candidates", "plan_cut", "plan_fleet", "round_time_s",
+]

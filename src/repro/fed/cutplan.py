@@ -1,0 +1,153 @@
+"""Profile-driven cut-layer selection (AdaptSFL, arXiv:2403.13101).
+
+At admission time the controller knows a device's profile — sustained
+FLOP/s, memory bandwidth, memory budget, round deadline — and must pick
+the split point.  The per-cut costs do not come from an analytic model:
+the client loss is compiled at every candidate cut and FLOPs / bytes
+are read from the compiled HLO with :func:`repro.launch.hlo_costs.
+total_costs` (the same scan-aware accounting `launch/roofline.py` uses
+for the datacenter dry-run), then rescaled by the device profile's
+roofline terms.
+
+The plan picks the **deepest** cut that fits the device (client
+parameter bytes within the memory budget, estimated round time within
+the deadline): deeper cuts offload more of the model from the server
+and shrink the smashed-data upload, so the client budget is the binding
+constraint.  Infeasible devices fall back to the shallowest cut with
+``feasible=False`` so the controller can deprioritize or reject them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+
+from repro.core.split import param_bytes
+from repro.launch import hlo_costs as HC
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceProfile:
+    """What the admission handshake reports about a device."""
+    name: str
+    peak_flops: float          # sustained FLOP/s on the client forward
+    mem_bw: float              # bytes/s
+    mem_bytes: float           # client parameter budget
+    deadline_s: float = math.inf   # per-round completion deadline
+
+
+# Representative fleet tiers for the phones+laptops+edge-TPUs scenario.
+PROFILES = {
+    "phone": DeviceProfile("phone", peak_flops=8e9, mem_bw=10e9,
+                           mem_bytes=512e6, deadline_s=60.0),
+    "laptop": DeviceProfile("laptop", peak_flops=200e9, mem_bw=50e9,
+                            mem_bytes=8e9, deadline_s=60.0),
+    "edge_tpu": DeviceProfile("edge_tpu", peak_flops=2e12, mem_bw=32e9,
+                              mem_bytes=1e9, deadline_s=60.0),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class CutCost:
+    """Compiled-HLO cost of one candidate cut's client loss."""
+    cut: int
+    flops: float               # one client forward (loss eval)
+    bytes: float               # HBM traffic of that forward
+    param_bytes: int           # client-side parameter footprint
+
+
+@dataclasses.dataclass(frozen=True)
+class CutPlan:
+    cut: int
+    round_s: float             # estimated h·(2·n_pairs) forward evals
+    feasible: bool
+
+
+def _cut_field(cfg) -> str:
+    return "client_blocks" if hasattr(cfg, "client_blocks") \
+        else "cut_layers"
+
+
+def cut_candidates(cfg) -> list[int]:
+    """Candidate split depths for a registry arch: every cut that leaves
+    at least one block on each side."""
+    if hasattr(cfg, "client_blocks"):
+        total = len(cfg.widths) * cfg.blocks_per_stage
+    else:
+        total = cfg.n_layers
+    return list(range(1, max(total, 2)))
+
+
+def candidate_costs(base_cfg, batch, rules=None, cuts=None,
+                    backend=None) -> list[CutCost]:
+    """Compile the client loss at every candidate cut and read
+    FLOPs/bytes from the compiled HLO.
+
+    ``batch``: one client micro-batch (arrays or ShapeDtypeStructs —
+    only shapes/dtypes are used).  ``rules`` is required for LM configs
+    (:class:`repro.distributed.sharding.AxisRules`).
+    """
+    from repro.core import protocols as P
+
+    cnn = hasattr(base_cfg, "client_blocks")
+    field = _cut_field(base_cfg)
+    costs = []
+    for cut in (cuts if cuts is not None else cut_candidates(base_cfg)):
+        cfg = (base_cfg.replace(**{field: cut})
+               if hasattr(base_cfg, "replace")
+               else dataclasses.replace(base_cfg, **{field: cut}))
+        if cnn:
+            from repro.models import cnn as CNN
+            api = P.cnn_api(cfg)
+            params = jax.eval_shape(
+                lambda c=cfg: CNN.init_cnn(jax.random.PRNGKey(0), c))
+        else:
+            from repro.models import transformer as T
+            api = P.lm_api(cfg, rules)
+            params = jax.eval_shape(
+                lambda c=cfg: T.init_lm(jax.random.PRNGKey(0), c))
+        cp = params["client"]
+        bshape = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), batch)
+        compiled = jax.jit(
+            lambda p, b: api.client_loss(p, b)[0]).lower(
+                cp, bshape).compile()
+        tc = HC.total_costs(compiled.as_text())
+        costs.append(CutCost(cut=cut, flops=float(tc["flops"]),
+                             bytes=float(tc["bytes"]),
+                             param_bytes=param_bytes(cp)))
+    return costs
+
+
+def round_time_s(cost: CutCost, profile: DeviceProfile, h: int,
+                 n_pairs: int) -> float:
+    """Roofline estimate of one local round on the device: ``h`` local
+    steps, each 2·n_pairs forward evals (two-point ZO probes), each
+    bounded by the slower of compute and memory streaming."""
+    fwd = max(cost.flops / profile.peak_flops,
+              cost.bytes / profile.mem_bw)
+    return h * 2 * n_pairs * fwd
+
+
+def plan_cut(costs: list[CutCost], profile: DeviceProfile, h: int,
+             n_pairs: int) -> CutPlan:
+    """Deepest cut meeting the device's memory budget and deadline."""
+    feasible = [c for c in costs
+                if c.param_bytes <= profile.mem_bytes
+                and round_time_s(c, profile, h, n_pairs)
+                <= profile.deadline_s]
+    if feasible:
+        best = max(feasible, key=lambda c: c.cut)
+        return CutPlan(best.cut, round_time_s(best, profile, h, n_pairs),
+                       True)
+    shallow = min(costs, key=lambda c: c.cut)
+    return CutPlan(shallow.cut,
+                   round_time_s(shallow, profile, h, n_pairs), False)
+
+
+def plan_fleet(costs: list[CutCost], profiles, h: int,
+               n_pairs: int) -> list[CutPlan]:
+    """One :class:`CutPlan` per device, from one shared cost table (the
+    per-cut compiles are amortized across the whole fleet)."""
+    return [plan_cut(costs, p, h, n_pairs) for p in profiles]

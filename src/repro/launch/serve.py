@@ -42,22 +42,34 @@ def main(argv=None):
     key = jax.random.PRNGKey(1)
     prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0,
                                 cfg.vocab)
-    # prefill token-by-token (keeps one code path; block prefill is the
-    # prefill_step used by the dry-run)
-    tok = prompt[:, :1]
+    # block prefill: one forward over the whole prompt that writes the
+    # caches (make_cached_prefill_step); enc-dec keeps the token loop
     t0 = time.time()
-    out_toks = []
-    for t in range(total - 1):
+    if cfg.enc_dec:
+        for t in range(args.prompt_len):
+            logits, caches = serve(params, caches, prompt[:, t:t + 1])
+        tok = jnp.argmax(logits[:, -1:, :cfg.vocab], axis=-1)
+    else:
+        prefill = jax.jit(P.make_cached_prefill_step(cfg, rules))
+        logits, caches = prefill(params, caches, prompt)
+        tok = jnp.argmax(logits[:, -1:, :cfg.vocab], axis=-1)
+    tok.block_until_ready()
+    t_prefill = time.time() - t0
+
+    out_toks = [tok]
+    t0 = time.time()
+    for _ in range(args.gen - 1):
         logits, caches = serve(params, caches, tok)
-        if t + 1 < args.prompt_len:
-            tok = prompt[:, t + 1:t + 2]
-        else:
-            tok = jnp.argmax(logits[:, -1:, :cfg.vocab], axis=-1)
-            out_toks.append(tok)
-    dt = time.time() - t0
+        tok = jnp.argmax(logits[:, -1:, :cfg.vocab], axis=-1)
+        out_toks.append(tok)
+    tok.block_until_ready()
+    t_decode = time.time() - t0
     gen = jnp.concatenate(out_toks, axis=1)
-    print(f"[serve] generated {gen.shape} in {dt:.2f}s "
-          f"({args.batch * len(out_toks) / dt:.1f} tok/s)")
+    pre_tps = args.batch * args.prompt_len / max(t_prefill, 1e-9)
+    dec_tps = args.batch * len(out_toks) / max(t_decode, 1e-9)
+    print(f"[serve] generated {gen.shape}: prefill {t_prefill:.2f}s "
+          f"({pre_tps:.1f} tok/s), decode {t_decode:.2f}s "
+          f"({dec_tps:.1f} tok/s)")
     print(gen[0])
     return 0
 

@@ -65,28 +65,62 @@ def run_fed(args, cfg, api):
                       participation=args.participation)
     replay_mesh = (make_replay_mesh() if args.replay_shard != "none"
                    else None)
-    round_fn = jax.jit(P.make_fed_round(
-        api, args.method, Z.ZOConfig(mu=args.zo_mu, n_pairs=args.zo_pairs),
-        fed, copt, sopt, uplink=args.uplink, client_lr=args.lr_client,
-        replay_shard=args.replay_shard, replay_mesh=replay_mesh,
-        replay_chunk=args.replay_chunk))
+    zo_cfg = Z.ZOConfig(mu=args.zo_mu, n_pairs=args.zo_pairs)
+    ds = BigramLM(vocab=cfg.vocab, seq_len=args.seq, seed=0)
+    durations = None
+    if args.fed_async:
+        if args.method != "heron":
+            raise SystemExit("--fed-async rides the seed-replay uplink "
+                             "and requires --method heron")
+        round_fn = P.make_async_round(
+            api, args.method, zo_cfg, fed, copt, sopt,
+            client_lr=args.lr_client, staleness_alpha=args.staleness,
+            buffer_k=args.buffer_k, replay_shard=args.replay_shard,
+            replay_mesh=replay_mesh, replay_chunk=args.replay_chunk)
+        if args.cutplan:
+            from repro.fed import cutplan as CP
+            costs = CP.candidate_costs(cfg,
+                                       ds.batch(jax.random.PRNGKey(2),
+                                                args.batch),
+                                       rules=AxisRules(mesh=None))
+            tiers = list(CP.PROFILES.values())
+            profiles = [tiers[i % len(tiers)] for i in
+                        range(args.clients)]
+            plans = CP.plan_fleet(costs, profiles, fed.h, zo_cfg.n_pairs)
+            durations = [p.round_s for p in plans]
+            for i, (prof, plan) in enumerate(zip(profiles, plans)):
+                print(f"[cutplan] client {i}: {prof.name:8s} "
+                      f"cut={plan.cut} est_round={plan.round_s:.3g}s "
+                      f"feasible={plan.feasible}")
+    else:
+        round_fn = jax.jit(P.make_fed_round(
+            api, args.method, zo_cfg, fed, copt, sopt,
+            uplink=args.uplink, client_lr=args.lr_client,
+            replay_shard=args.replay_shard, replay_mesh=replay_mesh,
+            replay_chunk=args.replay_chunk))
     params = T.init_lm(jax.random.PRNGKey(0), cfg)
     state = {"client": params["client"], "server": params["server"],
              "opt_server": sopt.init(params["server"])}
-    ds = BigramLM(vocab=cfg.vocab, seq_len=args.seq, seed=0)
     t0 = time.time()
     for r in range(args.steps):
         rb = round_batches(ds, jax.random.fold_in(jax.random.PRNGKey(5),
                                                   r),
                            args.clients, args.local_steps, args.batch)
-        state, m = round_fn(state, rb, jax.random.fold_in(
-            jax.random.PRNGKey(9), r))
+        key_r = jax.random.fold_in(jax.random.PRNGKey(9), r)
+        if args.fed_async:
+            state, m = round_fn(state, rb, key_r, durations=durations)
+            extra = (f"flushes={int(m['flushes'])} "
+                     f"staleness={m['mean_staleness']:.2f} "
+                     f"upd/s={m['updates_per_sim_s']:.3g} ")
+        else:
+            state, m = round_fn(state, rb, key_r)
+            extra = ""
         print(f"[fed] round {r:3d} "
               f"client_loss={float(m['client_loss']):.4f} "
               f"server_loss={float(m['server_loss']):.4f} "
-              f"uplink={args.uplink} "
+              f"uplink={'seed_replay' if args.fed_async else args.uplink} "
               f"bytes/round={float(m['uplink_bytes']):.3g} "
-              f"(dense={float(m['uplink_bytes_dense']):.3g}) "
+              f"(dense={float(m['uplink_bytes_dense']):.3g}) {extra}"
               f"({time.time()-t0:.1f}s)")
     return 0
 
@@ -124,6 +158,20 @@ def main(argv=None):
                     help="stream the replay in donated-buffer chunks of "
                          "this many (client, step, pair) entries per "
                          "device — O(d) server memory for huge cohorts")
+    ap.add_argument("--fed-async", action="store_true",
+                    help="buffered-async round engine: seed-replay "
+                         "arrivals are applied as they land, weighted by "
+                         "staleness (implies --fed, requires heron)")
+    ap.add_argument("--staleness", type=float, default=0.0,
+                    help="staleness-decay exponent alpha in "
+                         "w(tau) = (1+tau)^-alpha (0 = no decay)")
+    ap.add_argument("--buffer-k", type=int, default=0,
+                    help="snapshot a new global every K async arrivals "
+                         "(0 = one flush per full cohort)")
+    ap.add_argument("--cutplan", action="store_true",
+                    help="pick per-client cut layers from device "
+                         "profiles (HLO costs + roofline) and use the "
+                         "estimated round times as async arrival order")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -131,7 +179,7 @@ def main(argv=None):
         else None
     rules = AxisRules(mesh=mesh, enable_fsdp=False)
     api = P.lm_api(cfg, rules)
-    if args.fed:
+    if args.fed or args.fed_async:
         return run_fed(args, cfg, api)
     if args.uplink != "dense":
         raise SystemExit("--uplink seed_replay requires --fed (the lean "

@@ -316,9 +316,36 @@ def attention_layer(params, x, cfg: ModelConfig, rules: AxisRules, *,
                                   causal_skip=(cfg.causal_skip
                                                and not cfg.seq_sharding),
                                   p_dtype=jnp.dtype(cfg.attn_p_dtype))
+        if cache is not None:
+            # block prefill: write the prompt's k/v so decode continues
+            # at pos = S (fresh caches only — assumes cache["pos"] == 0)
+            new_cache = _prefill_cache(cache, k, v)
     o = o.reshape(B, S, cfg.n_heads * hd)
     out = L.dense(params["wo"], o, cdt, psub(perturb, "wo"))
     return constrain(out, rules, ("batch", None, None)), new_cache
+
+
+def _prefill_cache(cache, k, v):
+    """Write a whole prompt's k/v into a (possibly ring) KV cache.
+
+    Entry at absolute position ``p`` lands at slot ``p % size`` — the
+    invariant the decode path's ring addressing (``slot = pos % size``)
+    continues from.  For ``S >= size`` (local-window ring shorter than
+    the prompt) only the last ``size`` entries are kept, rolled by
+    ``S % size`` so slot ``(S - size + i) % size`` holds tail entry
+    ``i``; for ``S < size`` it is a plain prefix write.
+    """
+    size = cache["k"].shape[1]
+    S = k.shape[1]
+    kd = k.astype(cache["k"].dtype)
+    vd = v.astype(cache["v"].dtype)
+    if S >= size:
+        kc = jnp.roll(kd[:, -size:], S % size, axis=1)
+        vc = jnp.roll(vd[:, -size:], S % size, axis=1)
+    else:
+        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], kd, 0, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], vd, 0, axis=1)
+    return {"k": kc, "v": vc, "pos": cache["pos"] + S}
 
 
 def init_kv_cache(cfg: ModelConfig, batch: int, seq: int, *, local: bool):

@@ -6,7 +6,8 @@ import pytest
 
 from repro.distributed.collectives import (ErrorFeedback, dequantize_int8,
                                            quantize_int8, topk_sparsify)
-from repro.distributed.fault import FaultInjector, remesh, run_resilient
+from repro.distributed.fault import (FaultInjector, backoff_s, remesh,
+                                     run_resilient)
 
 
 def test_remesh_from_visible_devices():
@@ -26,15 +27,56 @@ def test_run_resilient_recovers_from_injected_faults(tmp_path):
 
     state0 = {"w": jnp.ones(4) * 10.0, "step": jnp.zeros((), jnp.int32)}
     clean, _, r0 = run_resilient(step_fn, state0, batch_fn, 20,
-                                 str(tmp_path / "clean"), ckpt_every=4)
-    assert r0 == 0
+                                 str(tmp_path / "clean"), ckpt_every=4,
+                                 sleep=lambda s: None)
+    assert r0.restarts == 0 and r0.backoff_total_s == 0.0
     inj = FaultInjector(fail_at=(7, 13))
     faulty, _, r1 = run_resilient(step_fn, state0, batch_fn, 20,
                                   str(tmp_path / "faulty"), ckpt_every=4,
-                                  injector=inj)
-    assert r1 == 2
+                                  injector=inj, sleep=lambda s: None)
+    assert r1.restarts == 2
+    assert r1.from_checkpoint == 2 and r1.from_start == 0
+    assert r1.resumed_at == [4, 12]
+    assert r1.backoff_total_s == backoff_s(1) + backoff_s(2)
     np.testing.assert_allclose(np.asarray(clean["w"]),
                                np.asarray(faulty["w"]), rtol=1e-6)
+
+
+def test_run_resilient_replays_from_start_without_checkpoint(tmp_path):
+    """Before the first checkpoint exists a fault really rewinds to the
+    initial (state, start_step) and replays — the step counter resets
+    and the replayed steps re-execute against the same data streams."""
+    seen = []
+
+    def step_fn(state, batch):
+        seen.append(int(state["step"]))
+        return {"w": state["w"] - 0.1 * batch,
+                "step": state["step"] + 1}, {}
+
+    def batch_fn(step):
+        return jnp.full((2,), float(step))
+
+    state0 = {"w": jnp.zeros(2), "step": jnp.zeros((), jnp.int32)}
+    inj = FaultInjector(fail_at=(2,))       # before ckpt_every=100 fires
+    out, _, tel = run_resilient(step_fn, state0, batch_fn, 4,
+                                str(tmp_path), ckpt_every=100,
+                                injector=inj, sleep=lambda s: None)
+    assert tel.restarts == 1
+    assert tel.from_start == 1 and tel.from_checkpoint == 0
+    assert tel.resumed_at == [0]
+    assert seen == [0, 1, 0, 1, 2, 3]       # genuine replay from step 0
+    clean, _, _ = run_resilient(step_fn, state0, batch_fn, 4,
+                                str(tmp_path / "clean"), ckpt_every=100,
+                                sleep=lambda s: None)
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(clean["w"]))
+
+
+def test_backoff_bounded_exponential():
+    assert backoff_s(1, base=0.05, cap=1.0) == 0.05
+    assert backoff_s(2, base=0.05, cap=1.0) == 0.1
+    assert backoff_s(3, base=0.05, cap=1.0) == 0.2
+    assert backoff_s(10, base=0.05, cap=1.0) == 1.0   # capped
 
 
 def test_run_resilient_gives_up_after_max_retries(tmp_path):
