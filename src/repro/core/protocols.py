@@ -309,7 +309,12 @@ def make_cached_prefill_step(cfg: ModelConfig, rules: AxisRules):
     return prefill
 
 
-def init_serve_caches(cfg: ModelConfig, batch: int, seq: int):
+def init_serve_caches(cfg: ModelConfig, batch: int, seq: int,
+                      per_slot: bool = False):
+    """``per_slot=True`` lays the caches out for the fused decode engine
+    (:mod:`repro.core.decode`): every KV cache carries a per-request
+    ``pos`` vector instead of one scalar, so slots at different sequence
+    positions coexist in one batch and finished slots can be recycled."""
     if cfg.enc_dec:
         return {
             "dec": T.init_stack_cache(cfg, T.decoder_specs(cfg), batch,
@@ -318,8 +323,10 @@ def init_serve_caches(cfg: ModelConfig, batch: int, seq: int):
                                  cfg.jnp_compute_dtype()),
         }
     return {
-        "client": T.init_stack_cache(cfg, T.client_specs(cfg), batch, seq),
-        "server": T.init_stack_cache(cfg, T.server_specs(cfg), batch, seq),
+        "client": T.init_stack_cache(cfg, T.client_specs(cfg), batch, seq,
+                                     per_slot),
+        "server": T.init_stack_cache(cfg, T.server_specs(cfg), batch, seq,
+                                     per_slot),
     }
 
 

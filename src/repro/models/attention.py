@@ -254,6 +254,9 @@ def attention_layer(params, x, cfg: ModelConfig, rules: AxisRules, *,
         k, v = cross_kv
     if positions is None:
         base = cache["pos"] if (cache is not None and decode) else 0
+        base = jnp.asarray(base)
+        if base.ndim == 1:        # slot-paged cache: per-request positions
+            base = base[:, None]
         positions = base + jnp.arange(S)[None, :] * jnp.ones((B, 1), jnp.int32)
     if cfg.rope_kind == "rope" and cross_kv is None:
         q = L.apply_rope(q, positions, cfg.rope_theta)
@@ -277,18 +280,26 @@ def attention_layer(params, x, cfg: ModelConfig, rules: AxisRules, *,
     if decode:
         assert cache is not None and S == 1
         pos = cache["pos"]
-        if window > 0:   # ring buffer of size window
-            slot = pos % cache["k"].shape[1]
+        size = cache["k"].shape[1]
+        if jnp.ndim(pos) == 1:
+            # slot-paged cache: every request decodes at its own position.
+            # Scatter the new k/v row per slot (mode="drop" silences
+            # requests that ran past capacity — the engine retires them).
+            slot = pos % size if window > 0 else pos
+            b_ix = jnp.arange(B)
+            kc = cache["k"].at[b_ix, slot].set(
+                k[:, 0].astype(cache["k"].dtype), mode="drop")
+            vc = cache["v"].at[b_ix, slot].set(
+                v[:, 0].astype(cache["v"].dtype), mode="drop")
         else:
-            slot = pos
-        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(
-            cache["k"].dtype), slot, axis=1)
-        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(
-            cache["v"].dtype), slot, axis=1)
+            slot = pos % size if window > 0 else pos
+            kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(
+                cache["k"].dtype), slot, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(
+                cache["v"].dtype), slot, axis=1)
         new_cache = {"k": kc, "v": vc, "pos": pos + 1}
         if window > 0:
-            o = decode_attention(q, kc, vc,
-                                 jnp.minimum(pos + 1, kc.shape[1]),
+            o = decode_attention(q, kc, vc, jnp.minimum(pos + 1, size),
                                  window=0, cap=cfg.attn_softcap,
                                  scale=cfg.attn_scale)
         else:
@@ -348,12 +359,16 @@ def _prefill_cache(cache, k, v):
     return {"k": kc, "v": vc, "pos": cache["pos"] + S}
 
 
-def init_kv_cache(cfg: ModelConfig, batch: int, seq: int, *, local: bool):
+def init_kv_cache(cfg: ModelConfig, batch: int, seq: int, *, local: bool,
+                  per_slot: bool = False):
+    """``per_slot=True`` makes ``pos`` a (batch,) vector — the slot-paged
+    layout the fused decode engine uses so requests of different lengths
+    coexist in one batch (see :mod:`repro.core.decode`)."""
     size = min(seq, cfg.window) if local and cfg.window > 0 else seq
     hd = cfg.resolved_head_dim
     dt = cfg.jnp_compute_dtype()
     return {
         "k": jnp.zeros((batch, size, cfg.n_kv_heads, hd), dt),
         "v": jnp.zeros((batch, size, cfg.n_kv_heads, hd), dt),
-        "pos": jnp.zeros((), jnp.int32),
+        "pos": jnp.zeros((batch,) if per_slot else (), jnp.int32),
     }

@@ -155,11 +155,12 @@ def apply_block(params, x, spec: LayerSpec, cfg: ModelConfig,
 
 
 def init_block_cache(spec: LayerSpec, cfg: ModelConfig, batch: int,
-                     seq: int):
+                     seq: int, per_slot: bool = False):
     c: dict[str, Any] = {}
     if spec.mixer in ATTN_MIXERS:
         c["attn"] = A.init_kv_cache(cfg, batch, seq,
-                                    local=(spec.mixer == "local_attn"))
+                                    local=(spec.mixer == "local_attn"),
+                                    per_slot=per_slot)
     elif spec.mixer == "rg_lru":
         c["rec"] = R.init_rg_lru_state(cfg, batch)
     elif spec.mixer == "mlstm":
@@ -231,11 +232,11 @@ def init_stack(pb: L.ParamBuilder, path: str, cfg: ModelConfig,
 
 
 def init_stack_cache(cfg: ModelConfig, specs: Sequence[LayerSpec],
-                     batch: int, seq: int):
+                     batch: int, seq: int, per_slot: bool = False):
     segments = build_segments(specs)
     out = []
     for unit, reps in segments:
-        one = tuple(init_block_cache(spec, cfg, batch, seq)
+        one = tuple(init_block_cache(spec, cfg, batch, seq, per_slot)
                     for spec in unit)
         stacked = jax.tree.map(
             lambda x: jnp.broadcast_to(x[None], (reps,) + x.shape), one)

@@ -1,0 +1,177 @@
+"""Fused decode engine tests: bit-exactness vs the eager serve loop,
+EOS early exit, slot-recycling invariance, and the sampler contract.
+
+The eager reference below is the historical serving path (per-token
+``make_serve_step`` Python loop with hardcoded argmax); the engine must
+reproduce its greedy token stream exactly for every decoder-only arch,
+including the recurrent-cache ones."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.core import decode as D
+from repro.core import protocols as P
+from repro.distributed.sharding import AxisRules
+from repro.models import transformer as T
+
+RULES = AxisRules(mesh=None)
+DECODER_ONLY = [a for a in ARCH_IDS
+                if not get_config(a, smoke=True).enc_dec]
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _drop_compiled_engines():
+    """The per-arch engine tests JIT ~4 executables per registry arch;
+    drop them (module fn cache + global jit caches) once the module is
+    done so a long single-process pytest run doesn't accumulate every
+    compiled engine on top of the other modules' caches."""
+    yield
+    D._FN_CACHE.clear()
+    jax.clear_caches()
+
+
+def eager_greedy(params, cfg, prompt, max_new, capacity):
+    """Historical path: scalar-pos caches, one serve dispatch per token
+    (prompt consumed token-by-token), argmax feedback from the host."""
+    serve = jax.jit(P.make_serve_step(cfg, RULES))
+    caches = P.init_serve_caches(cfg, 1, capacity)
+    prompt = jnp.asarray(prompt, jnp.int32)[None, :]
+    logits = None
+    for t in range(prompt.shape[1]):
+        logits, caches = serve(params, caches, prompt[:, t:t + 1])
+    toks = []
+    for _ in range(max_new):
+        tok = int(jnp.argmax(logits[0, -1, :cfg.vocab]))
+        toks.append(tok)
+        logits, caches = serve(params, caches,
+                               jnp.asarray([[tok]], jnp.int32))
+    return toks
+
+
+@pytest.mark.parametrize("arch", DECODER_ONLY)
+def test_fused_greedy_matches_eager(arch):
+    """Mixed-length requests through the fused engine produce exactly
+    the eager per-request greedy token streams."""
+    cfg = get_config(arch, smoke=True)
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, size=n) for n in (5, 9)]
+    max_new, capacity = 6, 24
+    eng = D.DecodeEngine(params, cfg, RULES, slots=2, capacity=capacity,
+                         segment_len=4)
+    rids = [eng.submit(p, max_new) for p in prompts]
+    out = eng.run()
+    for rid, p in zip(rids, prompts):
+        ref = eager_greedy(params, cfg, p, max_new, capacity)
+        assert out[rid] == ref, f"{arch}: fused != eager for {len(p)}-tok"
+
+
+def test_eos_early_exit_truncates_stream():
+    """With eos_id set to a token the greedy stream emits mid-flight,
+    the engine returns exactly the prefix up to and including EOS."""
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    prompt = np.random.default_rng(3).integers(0, cfg.vocab, size=7)
+    ref = eager_greedy(params, cfg, prompt, 10, 24)
+    k = next((i for i in range(1, len(ref)) if ref[i] not in ref[:i]),
+             None)
+    if k is None:
+        pytest.skip("greedy stream has no late-first-occurrence token")
+    eng = D.DecodeEngine(params, cfg, RULES, slots=2, capacity=24,
+                         segment_len=4, eos_id=ref[k])
+    rid = eng.submit(prompt, 10)
+    assert eng.run()[rid] == ref[:k + 1]
+
+
+def test_eos_on_prefill_token_finishes_without_slot():
+    """A request whose very first sampled token is EOS finishes at
+    admission and never occupies a decode slot."""
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    prompt = np.random.default_rng(3).integers(0, cfg.vocab, size=7)
+    first = eager_greedy(params, cfg, prompt, 1, 24)[0]
+    eng = D.DecodeEngine(params, cfg, RULES, slots=2, capacity=24,
+                         segment_len=4, eos_id=first)
+    rid = eng.submit(prompt, 10)
+    out = eng.run()[rid]
+    assert out == [first]
+    assert eng.segments == 0        # no fused segment ever ran
+
+
+def test_slot_recycling_invariance():
+    """Same (prompt, key) yields the same sampled tokens whether the
+    request runs alone in a fresh engine or lands in a recycled slot
+    behind other traffic."""
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    sampler = D.SamplerConfig(greedy=False, temperature=0.9, top_k=20)
+    prompt = np.random.default_rng(5).integers(0, cfg.vocab, size=8)
+    key = jax.random.PRNGKey(42)
+
+    solo = D.DecodeEngine(params, cfg, RULES, slots=2, capacity=24,
+                          segment_len=4, sampler=sampler)
+    solo_rid = solo.submit(prompt, 8, key=key)
+    ref = solo.run()[solo_rid]
+
+    crowded = D.DecodeEngine(params, cfg, RULES, slots=2, capacity=24,
+                             segment_len=4, sampler=sampler)
+    rng = np.random.default_rng(6)
+    for i in range(4):                       # force at least one recycle
+        crowded.submit(rng.integers(0, cfg.vocab, size=5 + i), 6)
+    rid = crowded.submit(prompt, 8, key=key)
+    out = crowded.run()
+    assert out[rid] == ref
+    assert len(out) == 5
+
+
+def test_segment_length_invariance():
+    """Token streams do not depend on the fused segment size (the key
+    discipline folds the per-request generated count, not the segment
+    schedule)."""
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    sampler = D.SamplerConfig(greedy=False, temperature=0.8, top_k=16)
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab, size=n) for n in (4, 6, 9)]
+
+    def run(seg):
+        eng = D.DecodeEngine(params, cfg, RULES, slots=2, capacity=24,
+                             segment_len=seg, sampler=sampler)
+        rids = [eng.submit(p, 7) for p in prompts]
+        out = eng.run()
+        return [out[r] for r in rids]
+
+    assert run(3) == run(16)
+
+
+def test_sampler_fixed_key_distribution():
+    """Sampler contract on a known 4-token distribution: greedy and
+    degenerate truncations reproduce argmax; fixed keys are
+    deterministic; empirical frequencies follow the logit order."""
+    base = jnp.log(jnp.asarray([0.6, 0.25, 0.1, 0.05], jnp.float32))
+    n = 512
+    logits = jnp.broadcast_to(base, (n, 4))
+    keys = jax.vmap(jax.random.fold_in)(
+        jnp.broadcast_to(jax.random.PRNGKey(0), (n, 2)).astype(
+            jnp.uint32), jnp.arange(n))
+
+    greedy = D.sample_logits(logits, keys, D.SamplerConfig())
+    assert bool(jnp.all(greedy == 0))
+    top1 = D.sample_logits(logits, keys, D.SamplerConfig(
+        greedy=False, temperature=0.7, top_k=1))
+    assert bool(jnp.all(top1 == 0))
+    nucleus = D.sample_logits(logits, keys, D.SamplerConfig(
+        greedy=False, temperature=1.0, top_p=0.1))
+    assert bool(jnp.all(nucleus == 0))       # argmax always survives
+
+    s = D.SamplerConfig(greedy=False, temperature=1.0)
+    draws = D.sample_logits(logits, keys, s)
+    assert bool(jnp.all(draws == D.sample_logits(logits, keys, s)))
+    counts = np.bincount(np.asarray(draws), minlength=4)
+    assert counts.sum() == n and counts.argmax() == 0
+    assert counts[0] > counts[3] + 50        # 0.6 vs 0.05 mass
+    topk2 = D.sample_logits(logits, keys, D.SamplerConfig(
+        greedy=False, temperature=1.0, top_k=2))
+    assert bool(jnp.all(topk2 <= 1))         # tokens 2,3 masked out
