@@ -755,6 +755,43 @@ def bench_kernels():
     row("kernels/rg_lru_interpret", (time.perf_counter() - t0) * 1e6,
         "pallas_interpret_smoke")
 
+    # fused dual-probe flash attention (clean + score-perturbed streams
+    # through one sequential pass over K/V) vs two separate flash
+    # passes.  Interpret wall clock is the CPU proxy; the HBM-bytes
+    # column counts the K/V block loads the shared pass eliminates
+    # (exact on TPU, where each grid step streams its K/V tile from
+    # HBM into VMEM).  REPRO_ATTN_SEQ caps the sequence for CI smoke.
+    from repro.kernels import flash_attention as FA
+    S = int(os.environ.get("REPRO_ATTN_SEQ", "256"))
+    B, H, D = 2, 12, 64
+    bq, bk = min(128, S), min(128, S)
+    qa = jax.random.normal(jax.random.PRNGKey(7), (B, S, H, D))
+    qb = jax.random.normal(jax.random.PRNGKey(8), (B, S, H, D))
+    ka = jax.random.normal(jax.random.PRNGKey(9), (B, S, H, D))
+    va = jax.random.normal(jax.random.PRNGKey(10), (B, S, H, D))
+    fused_fa = jax.jit(lambda qa, qb, k, v: ops.zo_dual_flash_attention(
+        qa, qb, k, v, seed=7, mu_b=1e-3, perturb_b=True,
+        impl="interpret", bq=bq, bk=bk))
+    one_fa = jax.jit(lambda q, k, v: FA.flash_attention(
+        q, k, v, bq=bq, bk=bk, interpret=True))
+
+    def two_fa(qa, qb, k, v):
+        return one_fa(qa, ka, va), one_fa(qb, ka, va)
+
+    us_fa_f, _ = timeit(fused_fa, qa, qb, ka, va, n=3)
+    us_fa_2, _ = timeit(two_fa, qa, qb, ka, va, n=3)
+    nq, nk = S // bq, -(-S // bk)
+    kv_gb = B * H * nq * nk * 2 * bk * D * 4 / 1e9  # one pass's K/V loads
+    ratio = us_fa_2 / us_fa_f
+    row("kernels/zo_dual_flash_attn_fused", us_fa_f,
+        f"B{B}xS{S}xH{H}xD{D} kv_hbm_gb={kv_gb:.3g} (shared K/V pass)")
+    gated = S >= 256      # short sequences don't amortize per-step cost
+    row("kernels/zo_dual_flash_attn_two_pass", us_fa_2,
+        f"kv_hbm_gb={2 * kv_gb:.3g} two_pass_over_fused={ratio:.2f} "
+        + ("(gate: >=1.2)" if gated else "(smoke size: gate waived)"))
+    assert not gated or ratio >= 1.2, (
+        f"fused flash speedup {ratio:.2f}x below 1.2x gate")
+
 
 BENCHES = {
     "table1": bench_table1, "table2": bench_table2,

@@ -46,6 +46,12 @@ class ModelAPI:
     # (client_params, batch, seeds_tree, mu) -> (l_clean, l_pert, smashed)
     # — both ZO losses of one pair from a single dual-batch forward.
     client_dual_loss: Callable | None = None
+    # leaf-seed predicate the kernel estimator AND the server replay must
+    # share (attn_probe="scores" excludes attention wk/wv — the probe
+    # moves to the score field, which is never replayed; see
+    # ops.attn_kv_seed_pred).  Must be a module-level function: the jit
+    # caches keyed on it rely on a stable identity/hash.
+    seed_pred: Callable | None = None
 
 
 def _forward_impl_of(cfg) -> str | None:
@@ -108,8 +114,12 @@ def lm_api(cfg: ModelConfig, rules: AxisRules) -> ModelAPI:
             lp = T.lm_loss(logits2[B:], lbl, cfg.vocab)
             return l0, lp, s2[:B]
 
+    seed_pred = None
+    if impl is not None and getattr(cfg, "attn_probe", "weights") == \
+            "scores":
+        seed_pred = O.attn_kv_seed_pred
     return ModelAPI(client_loss, aux_loss, server_loss, joint_loss,
-                    client_dual_loss)
+                    client_dual_loss, seed_pred)
 
 
 def cnn_api(cfg: CNN.CNNConfig) -> ModelAPI:
@@ -207,8 +217,9 @@ def make_train_step(api: ModelAPI, method: str, zo_cfg: Z.ZOConfig,
                         return api.client_dual_loss(combine(tcx, fc),
                                                     batch, seeds, mu)
 
-                    g_c, info = Z.zo_gradient_kernel(dloss, tc, base_seed,
-                                                     zo_cfg)
+                    g_c, info = Z.zo_gradient_kernel(
+                        dloss, tc, base_seed, zo_cfg,
+                        seed_pred=api.seed_pred)
                 else:
                     g_c, info = Z.zo_gradient(closs, tc, key, zo_cfg,
                                               shardings=client_shardings)
@@ -402,7 +413,8 @@ def _make_local_update(api: ModelAPI, method: str, zo_cfg: Z.ZOConfig,
                 def dloss(cpx, seeds, mu):
                     return api.client_dual_loss(cpx, batch, seeds, mu)
 
-                g, info = Z.zo_gradient_kernel(dloss, cp, key, zo_cfg)
+                g, info = Z.zo_gradient_kernel(dloss, cp, key, zo_cfg,
+                                               seed_pred=api.seed_pred)
             else:
                 g, info = Z.zo_gradient(closs, cp, key, zo_cfg)
             loss, smashed = info["loss"], info["aux"]
@@ -587,8 +599,8 @@ def make_fed_round(api: ModelAPI, method: str, zo_cfg: Z.ZOConfig,
             if kernel_client:
                 new_client = AG.seed_replay_aggregate_kernel(
                     state["client"], client_keys, coeffs_nhp, client_lr,
-                    mask, shard=replay_shard, mesh=replay_mesh,
-                    chunk=replay_chunk)
+                    mask, seed_pred=api.seed_pred, shard=replay_shard,
+                    mesh=replay_mesh, chunk=replay_chunk)
             else:
                 new_client = AG.seed_replay_aggregate(
                     state["client"], client_keys, coeffs_nhp, client_lr,
@@ -686,7 +698,8 @@ def make_async_round(api: ModelAPI, method: str, zo_cfg: Z.ZOConfig,
             state["client"], client_lr, zo_cfg, kernel=kernel_client,
             staleness=StalenessConfig(alpha=staleness_alpha),
             buffer_k=buffer_k, shard=replay_shard, mesh=replay_mesh,
-            chunk=replay_chunk, on_flush=on_flush)
+            chunk=replay_chunk, seed_pred=api.seed_pred,
+            on_flush=on_flush)
 
         tokens_host = np.asarray(client_keys) if kernel_client \
             else np.asarray(AG._raw_key_data(client_keys))

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import flash_attention as FA
+from repro.kernels import ref as REF
 from repro.kernels import rg_lru as RG
 from repro.kernels import zo_matmul as ZM
 
@@ -132,6 +133,50 @@ def flash_attention(q, k, v, **kw):
     return FA.flash_attention(q, k, v, **kw)
 
 
+def attn_score_field(seed, n_heads, seq_q, seq_kv, row_offset=0):
+    """Materialized (H, Sq, Skv) score-noise field — the replay /
+    emulation oracle of the in-kernel per-tile windows of
+    :func:`repro.kernels.flash_attention.zo_dual_flash_attention`: head
+    h, query row i, kv column j reads ``U[row_offset + h*Sq + i, j]`` of
+    the canonical 2-D hash stream (batch-independent; stacked scan
+    layers pass ``row_offset = rep * n_heads * seq_q``)."""
+    u = uniform_noise(seed, (n_heads * seq_q, seq_kv),
+                      row_offset=row_offset)
+    return u.reshape(n_heads, seq_q, seq_kv)
+
+
+def zo_dual_flash_attention(qa, qb, k, v, *, kb=None, vb=None, seed=0,
+                            mu_a=0.0, mu_b=0.0, row_offset=0,
+                            perturb_a=False, perturb_b=True, impl=None,
+                            **kw):
+    """Fused dual-probe flash attention — both estimator streams of the
+    two-point ZO probe in ONE pass over the K/V blocks.
+
+    ``kb is None`` selects the shared-KV score-probe mode (perturbation
+    ``mu * U(seed)`` on the pre-softmax scores); ``kb``/``vb`` given is
+    the weight-probe mode (per-stream K/V, no score noise by default).
+    ``impl="xla"`` runs the pure-jnp oracle with the score field
+    materialized by :func:`attn_score_field` — bit-identical noise, the
+    same stream the compiled/interpret kernel generates tile-by-tile.
+    """
+    impl = _resolve(impl)
+    if impl == "xla":
+        u = None
+        if perturb_a or perturb_b:
+            u = attn_score_field(seed, qa.shape[2], qa.shape[1],
+                                 k.shape[1], row_offset)
+        return REF.zo_dual_flash_attention_ref(
+            qa, qb, k, v, kb=kb, vb=vb, u=u, mu_a=mu_a, mu_b=mu_b,
+            perturb_a=perturb_a, perturb_b=perturb_b,
+            causal=kw.get("causal", True), window=kw.get("window", 0),
+            cap=kw.get("cap", 0.0), scale=kw.get("scale"))
+    kw.setdefault("interpret", impl == "interpret" or _interpret())
+    return FA.zo_dual_flash_attention(
+        qa, qb, k, v, kb=kb, vb=vb, seed=seed, mu_a=mu_a, mu_b=mu_b,
+        row_offset=row_offset, perturb_a=perturb_a, perturb_b=perturb_b,
+        **kw)
+
+
 def rg_lru_scan(a, b, **kw):
     kw.setdefault("interpret", _interpret())
     return RG.rg_lru_scan(a, b, **kw)
@@ -186,6 +231,37 @@ def leaf_seed_tree(tree, base_seed, pred=None):
         return base + jnp.int32(path_hash(path))
 
     return walk(tree, "")
+
+
+# score-probe seed scheme: the per-layer score field's seed is derived
+# from the layer's wq leaf seed by folding a fixed salt, so it rides the
+# exact (base_seed, pair, path) stream weight leaves use without needing
+# its own entry in the seeds tree.
+ATTN_SCORE_SALT = path_hash("attn/scores")
+
+
+def attn_score_seed(seeds):
+    """Per-layer score-field seed for the shared-KV score probe:
+    ``fold_seed(seed(wq/w), ATTN_SCORE_SALT)``; None when wq is not
+    ZO-seeded (frozen / LoRA-only layers skip the score probe)."""
+    if not isinstance(seeds, dict):
+        return None
+    sw = seeds.get("wq")
+    sw = sw.get("w") if isinstance(sw, dict) else None
+    if sw is None:
+        return None
+    return fold_seed(sw, ATTN_SCORE_SALT)
+
+
+def attn_kv_seed_pred(path: str) -> bool:
+    """Seed predicate for ``attn_probe="scores"``: attention k/v
+    projections are NOT weight-perturbed (both streams attend k/v from
+    the clean half; the probe moves to the score field instead), so
+    their leaves must be excluded from BOTH the client's forward seeds
+    and the server's replay — same predicate on both sides keeps the
+    lean uplink exact.  Module-level so it hashes stably across the jit
+    caches keyed on it."""
+    return "attn/wk/" not in path and "attn/wv/" not in path
 
 
 def any_seed(seeds) -> bool:

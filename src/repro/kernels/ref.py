@@ -47,6 +47,51 @@ def flash_attention_ref(q, k, v, *, causal=True, window=0, cap=0.0,
     return o.reshape(B, Sq, H, D).astype(q.dtype)
 
 
+def zo_dual_flash_attention_ref(qa, qb, k, v, *, kb=None, vb=None, u=None,
+                                mu_a=0.0, mu_b=0.0, perturb_a=False,
+                                perturb_b=True, causal=True, window=0,
+                                cap=0.0, scale=None):
+    """Dual-probe attention oracle: clean + perturbed outputs from ONE
+    stream definition (the same ``one()`` closure evaluates both, so the
+    oracle cannot drift between streams).
+
+    ``u`` is the materialized (H, Sq, Skv) score-noise field (see
+    ``repro.kernels.ops.attn_score_field``), added to the perturbed
+    stream's scores post-softcap / pre-mask; ``kb``/``vb`` give the
+    b-stream its own K/V (weight-probe mode — no score noise there
+    unless requested).
+    """
+    def one(q, kk, vv, pert, mu):
+        B, Sq, H, D = q.shape
+        Skv, Kv = kk.shape[1], kk.shape[2]
+        G = H // Kv
+        sc = scale if scale is not None else D ** -0.5
+        qr = q.reshape(B, Sq, Kv, G, D).astype(jnp.float32)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qr,
+                       kk.astype(jnp.float32)) * sc
+        if cap and cap > 0:
+            s = cap * jnp.tanh(s / cap)
+        if pert and u is not None:
+            un = u.reshape(Kv, G, Sq, Skv)      # (H,Sq,Skv) head-major
+            s = s + jnp.float32(mu) * un[None]
+        q_pos = jnp.arange(Sq)[:, None]
+        kv_pos = jnp.arange(Skv)[None, :]
+        mask = jnp.ones((Sq, Skv), bool)
+        if causal:
+            mask &= q_pos >= kv_pos
+        if window and window > 0:
+            mask &= (q_pos - kv_pos) < window
+        s = jnp.where(mask[None, None, None], s, -2.0e38)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgqs,bskd->bqkgd", p, vv.astype(jnp.float32))
+        return o.reshape(B, Sq, H, D).astype(q.dtype)
+
+    oa = one(qa, k, v, perturb_a, mu_a)
+    ob = one(qb, kb if kb is not None else k,
+             vb if vb is not None else v, perturb_b, mu_b)
+    return oa, ob
+
+
 def rg_lru_scan_ref(a, b):
     """Sequential reference for h_t = a_t h_{t-1} + b_t."""
     def step(h, ab):

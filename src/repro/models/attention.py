@@ -12,11 +12,36 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.distributed.sharding import AxisRules, constrain
+from repro.kernels import ops as O
 from repro.kernels.ops import psub
 from repro.models import layers as L
 from repro.models.config import ModelConfig
 
 NEG_INF = -2.0e38
+
+
+def _fa_impl(cfg) -> str | None:
+    """Resolve the config's forward_impl knob to a flash-ATTENTION kernel
+    backend; None keeps the pure-XLA :func:`blocked_attention` path
+    (which IS the online-softmax emulation of the kernel — the
+    off-TPU "kernel" resolution for the clean stream)."""
+    fi = getattr(cfg, "forward_impl", "xla")
+    if fi == "kernel_interpret":
+        return "interpret"
+    if fi == "kernel" and jax.default_backend() == "tpu":
+        return "pallas"
+    return None
+
+
+def _fa_blocks(Sq: int, Skv: int) -> tuple[int, int]:
+    """Interpret-friendly flash tile sizes: bq must divide Sq exactly;
+    bk is free (the kernel pads Skv)."""
+    bq = Sq
+    for cand in (512, 256, 128, 64, 32, 16, 8):
+        if cand <= Sq and Sq % cand == 0:
+            bq = cand
+            break
+    return bq, min(512, Skv)
 
 
 def init_attention(pb: L.ParamBuilder, path: str, cfg: ModelConfig):
@@ -225,6 +250,45 @@ def decode_attention(q, k_cache, v_cache, valid_len, *, window=0, cap=None,
 
 
 # ---------------------------------------------------------------------------
+# fused ZO dual-probe dispatch
+# ---------------------------------------------------------------------------
+
+def _dual_probe_attention(q, k, v, cfg: ModelConfig, *, window: int,
+                          perturb, score_probe: bool):
+    """Both estimator streams through ONE fused flash pass.
+
+    ``q`` stacks [clean; perturbed] on the leading batch axis.  In
+    weight-probe mode k/v are stacked the same way and each stream
+    attends its own K/V (bit-identical per stream to two separate flash
+    calls, half the grid steps).  In score-probe mode k/v carry ONLY the
+    clean half — both streams share every K/V load — and the perturbed
+    stream adds ``mu * U(seed)`` to its pre-softmax scores, seeded per
+    layer/pair by :func:`repro.kernels.ops.attn_score_seed` with the
+    scan repeat index row-offsetting the canonical (reps*H*Sq, Skv)
+    field.
+    """
+    B2 = q.shape[0] // 2
+    S = q.shape[1]
+    common = dict(causal=True, window=window,
+                  cap=cfg.attn_softcap or 0.0, scale=cfg.attn_scale,
+                  impl=perturb.impl)
+    if perturb.impl != "xla":
+        common["bq"], common["bk"] = _fa_blocks(S, k.shape[1])
+    if score_probe:
+        sseed = O.attn_score_seed(perturb.seeds)
+        off = jnp.asarray(perturb.rep, jnp.int32) * (cfg.n_heads * S)
+        oa, ob = O.zo_dual_flash_attention(
+            q[:B2], q[B2:], k, v, seed=0 if sseed is None else sseed,
+            mu_a=0.0, mu_b=perturb.mu, row_offset=off, perturb_a=False,
+            perturb_b=sseed is not None, **common)
+    else:
+        oa, ob = O.zo_dual_flash_attention(
+            q[:B2], q[B2:], k[:B2], v[:B2], kb=k[B2:], vb=v[B2:],
+            perturb_a=False, perturb_b=False, **common)
+    return jnp.concatenate([oa, ob], axis=0)
+
+
+# ---------------------------------------------------------------------------
 # full attention layer (proj + rope + impl dispatch + out proj)
 # ---------------------------------------------------------------------------
 
@@ -243,12 +307,22 @@ def attention_layer(params, x, cfg: ModelConfig, rules: AxisRules, *,
     hd = cfg.resolved_head_dim
     cdt = cfg.jnp_compute_dtype()
     window = cfg.window if local else 0
+    # score-probe mode: the dual probe moves from the k/v projections to
+    # the pre-softmax scores — k/v come from the CLEAN half only (one
+    # projection serves both streams, every K/V load shared in-kernel)
+    # and wk/wv are never weight-perturbed (ops.attn_kv_seed_pred keeps
+    # the estimator/replay seed streams consistent with this).
+    score_probe = (perturb is not None and perturb.dual
+                   and cross_kv is None and not cfg.seq_sharding
+                   and getattr(cfg, "attn_probe", "weights") == "scores")
     q = _split_heads(L.dense(params["wq"], x, cdt, psub(perturb, "wq")),
                      cfg.n_heads, hd)
     if cross_kv is None:
-        k = _split_heads(L.dense(params["wk"], x, cdt, psub(perturb, "wk")),
+        xkv = x[: x.shape[0] // 2] if score_probe else x
+        pkv = None if score_probe else perturb
+        k = _split_heads(L.dense(params["wk"], xkv, cdt, psub(pkv, "wk")),
                          cfg.n_kv_heads, hd)
-        v = _split_heads(L.dense(params["wv"], x, cdt, psub(perturb, "wv")),
+        v = _split_heads(L.dense(params["wv"], xkv, cdt, psub(pkv, "wv")),
                          cfg.n_kv_heads, hd)
     else:
         k, v = cross_kv
@@ -258,14 +332,19 @@ def attention_layer(params, x, cfg: ModelConfig, rules: AxisRules, *,
         if base.ndim == 1:        # slot-paged cache: per-request positions
             base = base[:, None]
         positions = base + jnp.arange(S)[None, :] * jnp.ones((B, 1), jnp.int32)
+    kv_positions = positions
+    if score_probe and positions.ndim == 2 and positions.shape[0] == B:
+        kv_positions = positions[: B // 2]      # k/v carry the clean half
     if cfg.rope_kind == "rope" and cross_kv is None:
         q = L.apply_rope(q, positions, cfg.rope_theta)
-        k = L.apply_rope(k, positions, cfg.rope_theta)
+        k = L.apply_rope(k, kv_positions, cfg.rope_theta)
     elif cfg.rope_kind == "mrope" and cross_kv is None:
         pos3 = positions if positions.ndim == 3 else jnp.broadcast_to(
             positions, (3,) + positions.shape)
+        kpos3 = kv_positions if kv_positions.ndim == 3 else \
+            jnp.broadcast_to(kv_positions, (3,) + kv_positions.shape)
         q = L.apply_mrope(q, pos3, cfg.mrope_sections, cfg.rope_theta)
-        k = L.apply_mrope(k, pos3, cfg.mrope_sections, cfg.rope_theta)
+        k = L.apply_mrope(k, kpos3, cfg.mrope_sections, cfg.rope_theta)
     if cfg.seq_sharding and not decode:
         # sequence-parallel attention: q (and the online-softmax state)
         # sharded on seq over the model axis; k/v replicated (small under
@@ -315,9 +394,33 @@ def attention_layer(params, x, cfg: ModelConfig, rules: AxisRules, *,
                               causal_skip=False)
     else:
         causal = True
-        if cfg.attn_impl == "naive":
+        dual = perturb is not None and perturb.dual
+        fused_dual = dual and (
+            score_probe or (perturb.impl != "xla"
+                            and cfg.attn_impl != "naive"
+                            and not cfg.seq_sharding))
+        fa = _fa_impl(cfg)
+        if fused_dual:
+            # ONE fused kernel pass carries both estimator streams —
+            # the dual probe no longer rides a doubled attention batch
+            o = _dual_probe_attention(q, k, v, cfg, window=window,
+                                      perturb=perturb,
+                                      score_probe=score_probe)
+        elif cfg.attn_impl == "naive":
             o = naive_attention(q, k, v, causal=causal, window=window,
                                 cap=cfg.attn_softcap, scale=cfg.attn_scale)
+        elif fa is not None and cache is None and not cfg.seq_sharding \
+                and perturb is not None and not dual:
+            # single-stream kernel-path forward under a ZO probe: the
+            # same flash kernel the dual probe fuses into.  Gated on
+            # ``perturb`` because Pallas calls have no JVP rule — the
+            # clean forward is differentiated by the FO baselines and
+            # the server-side update, so it stays on blocked_attention
+            bq, bk = _fa_blocks(q.shape[1], k.shape[1])
+            o = O.flash_attention(q, k, v, causal=causal, window=window,
+                                  cap=cfg.attn_softcap or 0.0,
+                                  scale=cfg.attn_scale, bq=bq, bk=bk,
+                                  interpret=(fa != "pallas"))
         else:
             # seq-sharded: one q block (the whole sharded seq), kv scan
             qc = q.shape[1] if cfg.seq_sharding else cfg.q_chunk

@@ -81,6 +81,15 @@ class ModelConfig:
                                    # perturbed forward through the Pallas
                                    # dual-probe matmuls (emulated bit-
                                    # equivalently off-TPU)
+    attn_probe: str = "weights"    # weights | scores (kernel path only):
+                                   # "weights" perturbs wq/wk/wv/wo and
+                                   # runs both streams' own K/V through
+                                   # one fused flash pass; "scores" keeps
+                                   # K/V clean+shared between streams and
+                                   # perturbs the pre-softmax scores with
+                                   # the hash field instead (wk/wv leave
+                                   # the seed stream — see
+                                   # ops.attn_kv_seed_pred)
     optimizer: str = "adamw"       # adamw|adafactor|sgdm (server side)
     # assigned-shape bookkeeping
     family: str = "dense"          # dense|moe|audio|ssm|hybrid|vlm

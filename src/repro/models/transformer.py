@@ -250,7 +250,10 @@ def apply_stack(stack_params, x, cfg: ModelConfig, rules: AxisRules,
     """Returns (x, new_caches).  ``perturb.seeds`` (if given) is a list
     mirroring ``stack_params``: one scalar seed per stacked leaf.  The
     scan body carries the repeat index so each rep addresses its own row
-    band of the stacked leaf's noise field (``Perturb.rep``)."""
+    band of the stacked leaf's noise field (``Perturb.rep``) — and, under
+    ``attn_probe="scores"``, its own ``rep * n_heads * Sq`` row band of
+    the per-layer attention score field (see
+    :func:`repro.models.attention._dual_probe_attention`)."""
     segments = build_segments(specs)
     new_caches = []
     for si, (unit, reps) in enumerate(segments):
